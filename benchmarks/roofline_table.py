@@ -1,0 +1,55 @@
+"""Render the §Roofline markdown table from results/dryrun_fcdp.json.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--multi-pod]
+"""
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render(multi_pod: bool, path=None):
+    with open(path or RESULTS / "dryrun_fcdp.json") as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if c.get("multi_pod") != multi_pod:
+            continue
+        if c["status"] == "skipped":
+            rows.append((c["arch"], c["cell"], None, c["reason"]))
+            continue
+        rows.append((c["arch"], c["cell"], c, ""))
+    mesh = "2x16x16 (512 chips)" if multi_pod else "16x16 (256 chips)"
+    out = [f"### Roofline — {mesh}, mode=fcdp, block_io activation policy",
+           "",
+           "| arch | cell | compute | memory | collective (ici+dcn) | "
+           "dominant | MODEL_FLOPS/HLO | roofline frac | HBM peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for arch, cell, c, reason in rows:
+        if c is None:
+            out.append(f"| {arch} | {cell} | — | — | — | {reason} | — | — | — |")
+            continue
+        r = c["roofline"]
+        peak = c["memory"]["peak_est_bytes"] / 2**30
+        out.append(
+            f"| {arch} | {cell} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['ici_s'])}+{fmt_s(r['dcn_s'])} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {peak:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    print(render(a.multi_pod))

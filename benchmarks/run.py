@@ -1,0 +1,304 @@
+import os
+# The comm/memory/throughput benches analyse the production meshes, which
+# requires the 512-device host platform BEFORE jax initializes. This is
+# deliberate and local to this entrypoint (smoke tests see 1 device).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Benchmark harness -- one benchmark per paper table/figure.
+
+  paper artifact            -> benchmark
+  Table VII (comm volume)   -> bench_comm_volume
+  Tables V/VI (max batch)   -> bench_max_batch
+  Fig. 5/6 (throughput)     -> bench_throughput_model
+  Fig. 9 (bw sensitivity)   -> bench_bw_sensitivity
+  SS III-B (memory)         -> bench_memory
+  kernels (substrate)       -> bench_kernels
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention; heavy
+numbers also land in results/bench_*.json.
+"""
+import json
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+import numpy as np
+
+
+def _cell(arch, cell, mode, multi_pod=True, overrides=None):
+    from repro.launch.dryrun import dryrun_cell
+    return dryrun_cell(arch, cell, multi_pod, mode,
+                       system_overrides=overrides, verbose=False)
+
+
+def bench_comm_volume(rows):
+    """Table VII analog: per-device DCN/ICI bytes per training iteration
+    for each system, plus the PEFT (FCDP-Comm) row."""
+    arch = "qwen2.5-3b"
+    out = []
+    for mode in ("zero3", "zeropp", "fcdp", "mics"):
+        r = _cell(arch, "train_4k", mode)
+        rl = r["roofline"]
+        out.append({"system": mode, "dcn_bytes": rl["dcn_bytes_per_chip"],
+                    "ici_bytes": rl["ici_bytes_per_chip"],
+                    "by_op": rl["coll_by_op"]})
+        rows.append((f"comm_volume/{mode}_dcn_GB", 0,
+                     rl["dcn_bytes_per_chip"] / 1e9))
+    r = _cell(arch, "train_4k", "fcdp", overrides={"peft": True})
+    rl = r["roofline"]
+    out.append({"system": "fcdp_comm(peft)",
+                "dcn_bytes": rl["dcn_bytes_per_chip"],
+                "ici_bytes": rl["ici_bytes_per_chip"],
+                "by_op": rl["coll_by_op"]})
+    rows.append(("comm_volume/fcdp_peft_dcn_GB", 0,
+                 rl["dcn_bytes_per_chip"] / 1e9))
+    base = out[0]["dcn_bytes"]
+    for o in out:
+        o["dcn_vs_zero3"] = o["dcn_bytes"] / base if base else 0
+    rows.append(("comm_volume/fcdp_dcn_reduction_pct", 0,
+                 100 * (1 - out[2]["dcn_vs_zero3"])))
+    rows.append(("comm_volume/peft_dcn_reduction_pct", 0,
+                 100 * (1 - out[-1]["dcn_vs_zero3"])))
+    return {"table": "VII", "arch": arch, "rows": out}
+
+
+def bench_memory(rows):
+    """SS III-B analog: per-device memory by system.
+
+    Multi-pod: the cached stage-1 shard is tiny (pods are 256-wide), so
+    fcdp ~ zeropp ~ zero3 on HBM; the paper's memory dilemma manifests on
+    the SINGLE-pod mesh where the cache is the fully-gathered weight:
+    zeropp pays it in HBM (the paper's OOM column), fcdp moves it to host
+    (reported separately -- the CPU backend drops pinned_host placements,
+    so the analytic host-cache size is subtracted for the fcdp row)."""
+    from repro.configs.base import RunConfig, SystemConfig, shape_cell
+    from repro.configs.registry import get_config
+    from repro.core.cache import cache_bytes_per_chip
+    from repro.core.stepfn import StepBundle
+    from repro.launch.mesh import make_production_mesh
+    arch = "granite-3-8b"
+    out = []
+    for multi_pod in (True, False):
+        mesh_name = "2pod" if multi_pod else "1pod"
+        for mode in ("zero3", "zeropp", "fcdp", "mics"):
+            r = _cell(arch, "train_4k", mode, multi_pod=multi_pod,
+                      overrides={"activation_policy": "block_io"})
+            m = r["memory"]
+            # analytic host-cache size for the fcdp row
+            cfg = get_config(arch)
+            run = RunConfig(model=cfg, shape=shape_cell("train_4k"),
+                            system=SystemConfig(mode=mode))
+            bundle = StepBundle(run, make_production_mesh(
+                multi_pod=multi_pod))
+            host = cache_bytes_per_chip(bundle)[
+                "host_cache_bytes_per_chip"] if mode == "fcdp" else 0.0
+            peak = m["peak_est_bytes"] - (host if mode == "fcdp" else 0)
+            out.append({"mesh": mesh_name, "system": mode,
+                        "args_GiB": m["argument_bytes"] / 2**30,
+                        "temp_GiB": m["temp_bytes"] / 2**30,
+                        "hbm_peak_GiB": peak / 2**30,
+                        "host_cache_GiB": host / 2**30})
+            rows.append((f"memory/{mesh_name}/{mode}_hbm_peak_GiB", 0,
+                         peak / 2**30))
+            if mode == "fcdp":
+                rows.append((f"memory/{mesh_name}/fcdp_host_cache_GiB", 0,
+                             host / 2**30))
+    return {"table": "III-B", "arch": arch, "rows": out}
+
+
+def bench_max_batch(rows):
+    """Tables V/VI analog: largest power-of-two global batch whose
+    compiled train step fits the 16 GiB v5e HBM, per system."""
+    import dataclasses
+    from repro.configs.base import RunConfig, SystemConfig, ShapeCell
+    from repro.configs.registry import get_config
+    from repro.core.stepfn import StepBundle
+    from repro.launch.mesh import make_production_mesh
+
+    HBM = 16 * 2**30
+    arch = "qwen2.5-3b"
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    out = {}
+    for mode in ("zero3", "zeropp", "fcdp"):
+        best = 0
+        for bexp in range(8, 13):           # global batch 256..4096
+            B = 2 ** bexp
+            cell = ShapeCell("mb", "train", 4096, B)
+            sysc = SystemConfig(mode=mode, activation_policy="block_io",
+                                loss_chunk=2048)
+            run = RunConfig(model=cfg, shape=cell, system=sysc)
+            try:
+                b = StepBundle(run, mesh)
+                c = b.make_train_step().lower(*b.train_input_sds()).compile()
+                m = c.memory_analysis()
+                peak = (m.argument_size_in_bytes + m.temp_size_in_bytes
+                        + m.output_size_in_bytes - m.alias_size_in_bytes)
+                if peak <= HBM:
+                    best = B
+                else:
+                    break
+            except Exception:
+                break
+        out[mode] = best
+        rows.append((f"max_batch/{mode}", 0, best))
+    return {"table": "V/VI", "arch": arch, "hbm_GiB": 16, "rows": out}
+
+
+def bench_throughput_model(rows):
+    """Fig. 5/6 analog: roofline-model step time -> samples/s per system,
+    plus the paper's strong-scaling axis (1 pod = 256 chips vs 2 pods =
+    512 chips, the 2-node vs 4-node analog). CPU container => derived
+    from the dry-run terms, not wall clock."""
+    out = []
+    for arch in ("qwen2.5-3b", "yi-34b"):
+        for mode in ("zero3", "zeropp", "fcdp"):
+            r = _cell(arch, "train_4k", mode,
+                      overrides={"activation_policy": "block_io"})
+            rl = r["roofline"]
+            # overlap model: compute overlaps comm; step >= max(terms)
+            step_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            sps = 256 / step_s
+            out.append({"arch": arch, "system": mode,
+                        "step_s": step_s, "samples_per_s": sps,
+                        "dominant": rl["dominant"]})
+            rows.append((f"throughput/{arch}/{mode}_samples_per_s",
+                         step_s * 1e6, sps))
+    # strong scaling: same global batch on half the chips (Fig. 5 analog)
+    scaling = []
+    for mode in ("zero3", "fcdp"):
+        for mp, chips in ((False, 256), (True, 512)):
+            r = _cell("qwen2.5-3b", "train_4k", mode, multi_pod=mp,
+                      overrides={"activation_policy": "block_io"})
+            rl = r["roofline"]
+            step_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            scaling.append({"system": mode, "chips": chips,
+                            "samples_per_s": 256 / step_s})
+            rows.append((f"strong_scaling/{mode}_{chips}chips",
+                         step_s * 1e6, 256 / step_s))
+    for mode in ("zero3", "fcdp"):
+        pair = [s for s in scaling if s["system"] == mode]
+        eff = (pair[1]["samples_per_s"] / pair[0]["samples_per_s"]) / 2
+        rows.append((f"strong_scaling/{mode}_efficiency_256to512", 0, eff))
+    return {"figure": "5/6", "rows": out, "strong_scaling": scaling}
+
+
+def bench_bw_sensitivity(rows):
+    """Fig. 9 analog: step time vs DCN bandwidth for full FT and PEFT.
+    Reproduces the paper's headline: FCDP-Comm throughput is ~flat in
+    network bandwidth while ZeRO-3 collapses.
+
+    Step time here is max(compute, ici+dcn) -- the paper's GPUs overlap
+    HBM traffic with compute, and our memory term is a documented upper
+    bound (see EXPERIMENTS.md), so including it would mask the comm
+    effect this figure isolates."""
+    arch = "qwen2.5-3b"
+    bws_gbps = [100, 25, 10, 1, 0.5, 0.1]   # per-host (4 chips/host)
+    cells = {}
+    for label, mode, ov in (
+            ("zero3", "zero3", None),
+            ("fcdp", "fcdp", None),
+            ("zero3_peft", "zero3", {"peft": True}),
+            ("fcdp_comm_peft", "fcdp", {"peft": True})):
+        r = _cell(arch, "train_4k", mode, overrides=ov)
+        rl = r["roofline"]
+        cells[label] = rl
+    out = []
+    for label, rl in cells.items():
+        for bw in bws_gbps:
+            dcn_s = rl["dcn_bytes_per_chip"] / (bw * 1e9 / 8 / 4)
+            # bw quoted per host (4 chips/host assumed), bits->bytes
+            step_s = max(rl["compute_s"], rl["ici_s"] + dcn_s)
+            out.append({"system": label, "dcn_gbps": bw,
+                        "samples_per_s": 256 / step_s})
+    # headline ratios at 1 Gbps
+    def sps(label, bw):
+        return next(o["samples_per_s"] for o in out
+                    if o["system"] == label and o["dcn_gbps"] == bw)
+    ratio_vs_zero3 = sps("fcdp_comm_peft", 1) / sps("zero3_peft", 1)
+    retention = sps("fcdp_comm_peft", 1) / sps("fcdp_comm_peft", 100)
+    rows.append(("bw_sensitivity/peft_speedup_vs_zero3_at_1gbps", 0,
+                 ratio_vs_zero3))
+    rows.append(("bw_sensitivity/fcdp_comm_retention_at_1gbps", 0,
+                 retention))
+    return {"figure": "9", "rows": out,
+            "peft_speedup_at_1gbps": ratio_vs_zero3,
+            "fcdp_comm_throughput_retention": retention}
+
+
+def bench_kernels(rows):
+    """Pallas kernels vs jnp oracle: allclose + interpret-mode timing."""
+    import jax, jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    out = []
+    B, S, H, hd = 2, 256, 4, 64
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    t0 = time.time()
+    o1 = ops.flash_attention(q, k, v, interpret=True, block_q=64, block_k=64)
+    t1 = (time.time() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(o1 - ref.attention_ref(q, k, v))))
+    out.append({"kernel": "flash_attention", "max_err": err})
+    rows.append(("kernels/flash_attention_err", t1, err))
+
+    r = jnp.asarray(rng.normal(0, 1, (B, S, 2, 16)), jnp.float32)
+    kk = jnp.asarray(rng.normal(0, 1, (B, S, 2, 16)), jnp.float32)
+    vv = jnp.asarray(rng.normal(0, 1, (B, S, 2, 16)), jnp.float32)
+    lw = -jnp.exp(jnp.asarray(rng.normal(-0.5, 1, (B, S, 2, 16)), jnp.float32))
+    u = jnp.asarray(rng.normal(0, 1, (2, 16)), jnp.float32)
+    t0 = time.time()
+    ow, _ = ops.wkv6(r, kk, vv, lw, u, chunk=32, interpret=True)
+    t1 = (time.time() - t0) * 1e6
+    eo, _ = ref.rwkv6_ref(r, kk, vv, lw, u)
+    err = float(jnp.max(jnp.abs(ow - eo)))
+    out.append({"kernel": "wkv6", "max_err": err})
+    rows.append(("kernels/wkv6_err", t1, err))
+
+    a = jnp.asarray(rng.uniform(0.3, 0.99, (B, S, 64)), jnp.float32)
+    bb = jnp.asarray(rng.normal(0, 1, (B, S, 64)), jnp.float32)
+    t0 = time.time()
+    hs = ops.ssm_scan(a, bb, chunk=64, channel_block=32, interpret=True)
+    t1 = (time.time() - t0) * 1e6
+    eh, _ = ref.mamba_scan_ref(a[..., None], bb[..., None])
+    err = float(jnp.max(jnp.abs(hs - eh[..., 0])))
+    out.append({"kernel": "ssm_scan", "max_err": err})
+    rows.append(("kernels/ssm_scan_err", t1, err))
+    return {"kernels": out}
+
+
+BENCHES = [
+    ("comm_volume", bench_comm_volume),
+    ("memory", bench_memory),
+    ("throughput_model", bench_throughput_model),
+    ("bw_sensitivity", bench_bw_sensitivity),
+    ("max_batch", bench_max_batch),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    RESULTS.mkdir(exist_ok=True)
+    rows = []
+    all_out = {}
+    for name, fn in BENCHES:
+        t0 = time.time()
+        try:
+            all_out[name] = fn(rows)
+            status = "ok"
+        except Exception as e:
+            traceback.print_exc()
+            all_out[name] = {"error": str(e)}
+            status = "FAILED"
+        print(f"# bench {name}: {status} ({time.time()-t0:.0f}s)")
+    with open(RESULTS / "bench_results.json", "w") as f:
+        json.dump(all_out, f, indent=2, default=float)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.6g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Long-context serving: sequence-sharded KV cache (the long_500k path)
+on a hybrid (jamba-family) model -- mamba state is O(1), attention layers
+use flash-decoding-style partial-softmax reconstruction over the 'data'
+axis.
+
+  PYTHONPATH=src python examples/long_context_serve.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig, ShapeCell, SystemConfig
+from repro.configs.registry import get_smoke_config
+from repro.core.stepfn import StepBundle
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    cell = ShapeCell("long", "decode", 256, 2)   # 256-token cache, batch 2
+    run = RunConfig(model=cfg, shape=cell,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+    bundle = StepBundle(run, mesh)
+    params = bundle.init_all_params(seed=0)
+    state = bundle.init_state(cell, seq_sharded=True)
+    dec = bundle.make_decode_step(seq_sharded=True)
+
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 1)), jnp.int32)
+    t0 = time.time()
+    n = 48
+    for i in range(n):
+        logits, state = dec(params, tok, state)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None] % (
+            cfg.vocab_size // 2) + 1
+    dt = time.time() - t0
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print(f"decoded {n} tokens x batch 2 with a sequence-sharded cache "
+          f"in {dt:.1f}s ({2 * n / dt:.1f} tok/s on CPU interpret)")
+    print("long-context serve OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""FCDP-Comm in action: LoRA fine-tune with frozen base weights.
+
+The frozen base (99%+ of params) lives in the FCDP-Comm cached layout --
+pod-replicated, intra-sharded -- so per-iteration DCN traffic collapses
+to the adapters (the paper's 100x headline). Prints the measured
+collective-volume comparison alongside the training run.
+
+  PYTHONPATH=src python examples/lora_finetune.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import functools
+import jax
+
+from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
+                                SystemConfig)
+from repro.configs.registry import get_smoke_config
+from repro.core.stepfn import StepBundle
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
+from repro.launch.mesh import make_mesh
+from repro.launch.roofline import collect_collectives
+from repro.optim.adamw import init_opt_state
+
+
+def measure_dcn(bundle):
+    step = bundle.make_train_step()
+    closed = step.trace(*bundle.train_input_sds()).jaxpr
+    sizes = {a: bundle.mi.size(a) for a in bundle.mi.axis_names}
+    return collect_collectives(closed, sizes)
+
+
+def main():
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = get_smoke_config("qwen2.5-3b")
+    cell = ShapeCell("lora", "train", 64, 8)
+    base = RunConfig(model=cfg, shape=cell,
+                     system=SystemConfig(mode="fcdp", min_shard_size=8),
+                     optimizer=OptimizerConfig(lr=1e-3, total_steps=20,
+                                               warmup_steps=2))
+    full = StepBundle(base, mesh)
+    lora = StepBundle(base.replace(system=base.system.replace(peft=True)),
+                      mesh)
+    s_full, s_lora = measure_dcn(full), measure_dcn(lora)
+    print(f"full-FT  DCN bytes/step/chip: {s_full.dcn_bytes:.0f}")
+    print(f"LoRA     DCN bytes/step/chip: {s_lora.dcn_bytes:.0f} "
+          f"({100 * (1 - s_lora.dcn_bytes / s_full.dcn_bytes):.1f}% reduction)")
+    n_t = sum(lora.def_leaves[i].size() for i in lora.train_idx)
+    n_all = sum(d.size() for d in lora.def_leaves)
+    print(f"trainable params: {n_t}/{n_all} ({100 * n_t / n_all:.2f}%)")
+
+    params = lora.init_all_params(seed=0)
+    tp, fp = lora.split(params)
+    opt = jax.jit(functools.partial(init_opt_state, sys=lora.run.system))(tp)
+    step = lora.make_train_step()
+    loader = ShardedLoader(SyntheticPackedLM(cfg, cell, DataConfig(0)), mesh,
+                           lora.batch_spec(cell))
+    for i in range(20):
+        tp, opt, m = step(tp, fp, opt, loader.get(i))
+        if i % 5 == 0:
+            print(f"step {i:3d} loss {float(m['loss']):.4f}")
+    print("LoRA fine-tune OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything an (arch x shape x system) cell needs is described here;
+model code, partitioner, and launchers consume these frozen configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # layers that are MoE: every `moe_period` starting at `moe_offset`
+    moe_period: int = 1
+    moe_offset: int = 0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64   # rank of the data-dependent decay LoRA
+    tokenshift: bool = True
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // num_heads
+    act: str = "swiglu"         # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    max_seq_len: int = 1 << 19
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # hybrid (jamba): within each period, which positions are attention
+    hybrid_period: int = 0           # 0 -> not hybrid
+    hybrid_attn_positions: Tuple[int, ...] = ()
+    # encdec
+    num_encoder_layers: int = 0      # >0 -> encoder-decoder
+    # vlm / audio frontends are stubs: inputs arrive pre-embedded
+    frontend: str = "none"           # none | vq_image | audio_frames
+    # which sublayer mixes tokens, decided per family in models/registry
+    sub_quadratic: bool = False      # True -> supports long_500k
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (used for roofline MODEL_FLOPS)."""
+        from repro.models.registry import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.registry import count_params
+        return count_params(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned input-shape cell."""
+    name: str               # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str               # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPE_CELLS: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+)
+
+
+def shape_cell(name: str) -> ShapeCell:
+    for c in SHAPE_CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown shape cell {name!r}; have {[c.name for c in SHAPE_CELLS]}")
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    """Which distributed-training system and caching policy to use.
+
+    mode:
+      zero3   - full sharding, re-gather fwd+bwd               (paper baseline)
+      zeropp  - device-cached intra shard, intra-only bwd AG   (ZeRO++ analog)
+      fcdp    - host-cached intra shard, intra-only bwd AG     (the paper)
+      mics    - subgroup (pod-local) sharding, no cross-pod AG (MiCS analog)
+    """
+    mode: str = "fcdp"
+    # FCDP-Cache: fraction of layers allowed to keep the cached shard on
+    # device (planner output; tau in the paper). 0.0 -> all host, 1.0 -> all device.
+    device_cache_fraction: float = 0.0
+    host_offload: bool = True          # False -> Saveable instead of Offloadable
+    # FCDP-Comm / PEFT
+    peft: bool = False
+    lora_rank: int = 8
+    lora_targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo")
+    # activation checkpointing: save_all (paper-faithful torch default),
+    # block_io (remat layer internals), offload_acts
+    activation_policy: str = "save_all"
+    # beyond-paper: int8 block-quantized gradient stage over the pod axis
+    grad_compress: str = "none"        # none | int8_pod
+    # chunked cross-entropy (beyond-paper memory optimization)
+    loss_chunk: int = 0                # 0 -> unchunked
+    # param/compute dtypes
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    master_dtype: str = "float32"
+    opt_state_dtype: str = "float32"
+    # replicate tensors smaller than this many elements instead of ZeRO-sharding
+    min_shard_size: int = 2048
+    # sequence parallelism over the model axis (beyond-paper optimization)
+    sequence_parallel: bool = False
+    remat_scan: bool = True            # scan over layer groups
+    # serving: store all weights in the FCDP-Comm frozen layout
+    # (pod-replicated, intra-sharded host cache) -> zero DCN traffic/token
+    serve_frozen: bool = True
+    # attention implementation: jnp | pallas | pallas_interpret
+    attn_impl: str = "jnp"
+    # MoE dispatch token chunk (bounds the [E,C,D] buffer)
+    moe_token_chunk: int = 8192
+    # beyond-paper: keep expert weights resident (ZeRO over pod only) --
+    # per-step gather volume >> resident size for MoE tensors
+    moe_weight_resident: bool = False
+    # beyond-paper: int8 transport for the large TP activation
+    # all-reduces (the dominant ICI term on dense train cells)
+    act_psum: str = "bf16"            # bf16 | int8
+    # beyond-paper: decode-time gather-free MoE -- compute against the
+    # sharded expert weights (tokens all-gathered over the shard axes,
+    # partial-contraction psum) instead of gathering GBs of expert
+    # weights per layer for a handful of tokens
+    moe_serve_sharded: bool = False
+
+    def replace(self, **kw) -> "SystemConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"     # cosine | linear | constant
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeCell
+    system: SystemConfig = field(default_factory=SystemConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    seed: int = 0
+    microbatch: int = 0          # 0 -> no gradient accumulation
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,16 @@
+"""qwen2.5-3b [dense]: 36L d_model=2048 16H (GQA kv=2) d_ff=11008
+vocab=151936 -- GQA, QKV bias. [hf:Qwen/Qwen2.5-0.5B family; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b", family="dense",
+    num_layers=36, d_model=2048, num_heads=16, num_kv_heads=2,
+    d_ff=11008, vocab_size=151936, head_dim=128,
+    act="swiglu", qkv_bias=True, rope_theta=1_000_000.0,
+    norm_eps=1e-6, sub_quadratic=False)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=512, head_dim=16,
+    act="swiglu", qkv_bias=True, sub_quadratic=False)

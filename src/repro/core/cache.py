@@ -1,0 +1,111 @@
+"""FCDP-Cache: the ahead-of-time memory planner (the paper's tau knob).
+
+XLA has no runtime allocator to poll, so the paper's "monitor GPU memory
+pressure, cache on-device when below tau" becomes a compile-time search:
+start from the fastest placement (device cache for every layer group),
+compile, read memory_analysis(), and demote groups device -> host ->
+regather until the step fits tau * HBM. Worst case (all regather) is
+exactly ZeRO-3 -- the paper's safety guarantee as a static property.
+
+Also provides the host-DRAM budget accounting (the paper's "~2W bytes of
+host memory per node"): on the CPU backend pinned_host placements are
+dropped, so bench/memory reporting uses these analytic numbers to
+separate would-be-host bytes from true device temps.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.fcdp import GatherPlan
+from repro.core.partition import is_def
+
+HBM_PER_CHIP = 16 * 2**30          # v5e
+
+
+def cache_bytes_per_chip(bundle) -> Dict[str, float]:
+    """Analytic size of the FCDP cache tier, per chip.
+
+    cache_after=1 (multi-pod): the stage-1 (intra-pod) shard, i.e.
+    param_bytes / (data*tp) per chip -- summed = W_bf16/(data*tp)*layers'
+    worth = W/(pod-degree) per pod total, the paper's 'W per node'.
+    cache_after=2 (single-pod): the fully gathered TP-local weight.
+    """
+    from repro.core.fcdp import plan_tree
+    mi = bundle.mi
+    sysc = bundle.run.system
+    plans = jax.tree.leaves(
+        bundle.model.plans,
+        is_leaf=lambda x: isinstance(x, GatherPlan))
+    defs = bundle.def_leaves
+    host = 0.0
+    for d, p in zip(defs, plans):
+        if not isinstance(p, GatherPlan) or not p.is_gathered:
+            continue
+        nbytes = d.size() * jax.dtypes.canonicalize_dtype(d.dtype).itemsize
+        if p.cache_after == 1:
+            # stage-1 result = the chip's shard gathered over inter axes
+            shard = nbytes / _spec_degree(d, mi)
+            inter_deg = math.prod(mi.size(a) for a in p.inter_axes) or 1
+            host += shard * inter_deg
+        else:
+            # fully gathered TP-local tensor (single-pod layout)
+            host += nbytes / (mi.tp if d.tp_dim is not None else 1)
+    return {"host_cache_bytes_per_chip": host}
+
+
+def _spec_degree(d, mi) -> int:
+    deg = 1
+    if d.fsdp_dim is not None:
+        for a in mi.fsdp_axes:
+            deg *= mi.size(a)
+    if d.tp_dim is not None:
+        deg *= mi.tp
+    return deg
+
+
+@dataclass
+class CachePlan:
+    """Per-segment placement emitted by the planner (consumed by
+    LM._segments via SystemConfig.device_cache_fraction)."""
+    device_fraction: float
+    fits: bool
+    peak_bytes: int
+    host_bytes: float
+    iterations: List[Dict]
+
+
+class MemoryPlanner:
+    """Iterative tau search over the device-cache fraction."""
+
+    def __init__(self, hbm_budget: int = HBM_PER_CHIP,
+                 host_budget: Optional[int] = None):
+        self.hbm = hbm_budget
+        self.host = host_budget
+
+    def _peak(self, bundle) -> int:
+        step = bundle.make_train_step()
+        c = step.lower(*bundle.train_input_sds()).compile()
+        m = c.memory_analysis()
+        return (m.argument_size_in_bytes + m.temp_size_in_bytes
+                + m.output_size_in_bytes - m.alias_size_in_bytes)
+
+    def plan(self, run, mesh, fractions=(1.0, 0.5, 0.25, 0.0)) -> CachePlan:
+        """Try device-cache fractions high->low; after 0.0, fall back to
+        activation remat (block_io), then declare regather-only."""
+        from repro.core.stepfn import StepBundle
+        iters = []
+        for frac in fractions:
+            sysc = run.system.replace(device_cache_fraction=frac)
+            bundle = StepBundle(run.replace(system=sysc), mesh)
+            peak = self._peak(bundle)
+            host = cache_bytes_per_chip(bundle)["host_cache_bytes_per_chip"]
+            iters.append({"device_fraction": frac, "peak_bytes": peak,
+                          "host_bytes": host})
+            if peak <= self.hbm and (self.host is None or host <= self.host):
+                return CachePlan(frac, True, peak, host, iters)
+        return CachePlan(0.0, False, iters[-1]["peak_bytes"],
+                         iters[-1]["host_bytes"], iters)

@@ -1,0 +1,223 @@
+"""FCDP-Sched: the two-stage parameter gather and its caching schedule.
+
+The paper's per-layer schedule (Fig. 4) maps onto JAX as:
+
+  stage 1 (inter / DCN):  w_cache = all_gather(w_shard, 'pod')
+  stage 2 (intra / ICI):  w_full  = all_gather(w_cache, 'data')
+
+The layer consuming ``w_full`` is wrapped in ``jax.checkpoint`` whose
+policy assigns the named value ``fcdp_cache`` to:
+
+  zero3   -> Recompute   : backward re-runs stage 1 + stage 2 (2x inter AG)
+  zeropp  -> Saveable    : cached shard lives in HBM, backward re-runs stage 2
+  fcdp    -> Offloadable : cached shard lives in pinned host memory,
+                           backward re-runs stage 2 only  (the paper)
+  mics    -> storage is already pod-replicated; stage 1 is empty and the
+             single intra stage recomputes (fwd+bwd intra AG, no DCN AG)
+
+On a mesh without a 'pod' axis (single pod) there is no slow tier; the
+cache boundary moves to after stage 2 (cache the fully gathered weight)
+so zeropp/fcdp still eliminate the backward all-gather, reproducing the
+paper's N=1 limit.
+
+Frozen parameters (FCDP-Comm) are *stored* in the cached layout
+(pod-replicated, intra-sharded, host-resident): their reconstruction
+never touches DCN and they receive no gradient. See core/comm.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core.partition import ParamDef, storage_fsdp_axes, tree_map_defs
+from repro.launch.mesh import fsdp_axes, intra_fsdp_axes
+
+try:  # name-based remat policies need the `name` primitive
+    from jax._src.ad_checkpoint import name_p
+    import jax._src.interpreters.partial_eval as pe
+    _HAVE_POLICY_INTERNALS = True
+except Exception:  # pragma: no cover - future jax versions
+    name_p, pe = None, None
+    _HAVE_POLICY_INTERNALS = False
+
+CACHE_NAME = "fcdp_cache"
+FULL_NAME = "fcdp_full"
+ACT_NAME = "act_ckpt"
+
+VALID_MODES = ("zero3", "zeropp", "fcdp", "mics")
+
+
+@dataclass(frozen=True)
+class GatherPlan:
+    """How one parameter is reconstructed inside the step function."""
+    fsdp_dim: Optional[int]          # dim index *inside the scan body*
+    inter_axes: Tuple[str, ...]      # stage-1 axes (DCN)
+    intra_axes: Tuple[str, ...]      # stage-2 axes (ICI)
+    cache_after: int                 # 1 or 2: where the cache boundary sits
+    frozen: bool = False
+    compress_bwd: bool = False       # int8 DCN gradient reduce (beyond-paper)
+
+    @property
+    def is_gathered(self) -> bool:
+        return self.fsdp_dim is not None and (bool(self.inter_axes) or bool(self.intra_axes))
+
+
+def make_gather_plan(pdef: ParamDef, mesh, mode: str,
+                     min_shard_size: int = 0,
+                     compress_bwd: bool = False) -> GatherPlan:
+    """Derive the gather plan matching ``storage_spec`` for this param.
+
+    If the def carries a 'stack' (scan) dimension, the returned fsdp dim
+    index is shifted to the *scan-body* view (stack dim consumed by scan).
+    """
+    if mode not in VALID_MODES:
+        raise ValueError(f"unknown system mode {mode!r}")
+    d = pdef.fsdp_dim
+    if d is None or pdef.size() < min_shard_size:
+        return GatherPlan(None, (), (), 2, pdef.frozen)
+    from repro.core.partition import effective_fsdp_axes
+    axes = effective_fsdp_axes(pdef, mesh, mode)
+    degree = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if not axes or pdef.shape[d] % degree != 0:
+        return GatherPlan(None, (), (), 2, pdef.frozen)
+    inter = tuple(a for a in axes if a == "pod")
+    intra = tuple(a for a in axes if a != "pod")
+    # cache boundary: after the inter stage if one exists, else after the
+    # full gather (single-pod / pod-replicated storage).
+    cache_after = 1 if inter else 2
+    body_dim = d - 1 if ("stack" in pdef.dims and
+                         pdef.dims.index("stack") < d) else d
+    return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
+                      compress_bwd=(compress_bwd and bool(inter)
+                                    and not pdef.frozen))
+
+
+def plan_tree(defs, mesh, mode: str, min_shard_size: int = 0,
+              compress_bwd: bool = False):
+    return tree_map_defs(
+        lambda p: make_gather_plan(p, mesh, mode, min_shard_size,
+                                   compress_bwd), defs)
+
+
+def gather_param(w: jax.Array, plan: GatherPlan) -> jax.Array:
+    """Reconstruct the full (TP-local) parameter from its ZeRO shard.
+
+    Must run inside shard_map. Named checkpoints mark the cache boundary
+    for the remat policy.
+
+    Frozen params (FCDP-Comm / serving) gather with the *invariant*
+    all-gather: they receive no gradient, and the invariant type keeps
+    downstream values replicated over the gathered axes (required for
+    serve-step output typing). Trainable params use the varying
+    all-gather, whose transpose is the ZeRO-3 gradient reduce-scatter.
+    """
+    if not plan.is_gathered:
+        return w
+    if plan.frozen:
+        from jax._src.lax.parallel import all_gather_invariant as _agi
+        def ag(x, axes, axis):
+            for a in axes:  # invariant AG takes one axis at a time
+                x = _agi(x, a, axis=axis, tiled=True)
+            return x
+    else:
+        def ag(x, axes, axis):
+            return jax.lax.all_gather(x, axes, axis=axis, tiled=True)
+    d = plan.fsdp_dim
+    if plan.inter_axes:
+        if plan.compress_bwd and len(plan.inter_axes) == 1 and not plan.frozen:
+            from repro.core.grad_compress import compressed_stage1_gather
+            w = compressed_stage1_gather(w, plan.inter_axes[0], d)
+        else:
+            w = ag(w, plan.inter_axes, d)
+    if plan.cache_after == 1:
+        w = checkpoint_name(w, CACHE_NAME)
+    if plan.intra_axes:
+        w = ag(w, plan.intra_axes, d)
+    if plan.cache_after == 2:
+        w = checkpoint_name(w, CACHE_NAME)
+    return checkpoint_name(w, FULL_NAME)
+
+
+def gather_tree(params, plans):
+    return jax.tree.map(gather_param, params, plans,
+                        is_leaf=lambda x: isinstance(x, GatherPlan))
+
+
+# ---------------------------------------------------------------------------
+# Remat policies (FCDP-Sched placement decisions)
+# ---------------------------------------------------------------------------
+
+def make_remat_policy(cache_placement: str, activation_policy: str = "save_all",
+                      host_offload: bool = True):
+    """Build a jax.checkpoint policy.
+
+    cache_placement: 'device' | 'host' | 'regather'
+    activation_policy: 'save_all' (paper-faithful, torch-like) |
+                       'block_io' (full activation remat) |
+                       'offload_acts' (named activations offloaded)
+    """
+    if not _HAVE_POLICY_INTERNALS:  # pragma: no cover
+        return jax.checkpoint_policies.nothing_saveable
+
+    # torch-autograd-like 'save_all': keep the outputs of matmuls and of
+    # paid-for collectives; recompute cheap elementwise chains (incl. the
+    # f32 norm upcasts, which would otherwise dominate activation memory).
+    SAVE_PRIMS = {"dot_general", "conv_general_dilated", "psum", "psum2",
+                  "psum_invariant", "all_to_all", "psum_scatter"}
+
+    # 'save_collectives' (beyond-paper perf policy, see EXPERIMENTS.md
+    # SSPerf): save only paid-for collective outputs so the backward remat
+    # recomputes matmuls (cheap, local) but never re-runs a psum /
+    # all_to_all (expensive, global). ~-33% on the TP-activation
+    # all-reduce volume vs block_io at ~0.25 GiB/layer extra HBM.
+    COLLECTIVE_SAVE_PRIMS = {"psum", "psum2", "psum_invariant",
+                             "all_to_all", "psum_scatter"}
+
+    def policy(prim, *_, **params):
+        s = getattr(prim, "name", str(prim))
+        if s == "all_gather" or s == "all_gather_invariant":
+            # gathered tensors are never implicitly saved: the whole point
+            return pe.Recompute
+        if prim is name_p:
+            name = params.get("name")
+            if name == CACHE_NAME:
+                if cache_placement == "device":
+                    return pe.Saveable
+                if cache_placement == "host":
+                    if host_offload:
+                        return pe.Offloadable(src="device", dst="pinned_host")
+                    return pe.Saveable
+                return pe.Recompute
+            if name == FULL_NAME:
+                return pe.Recompute
+            if name == ACT_NAME:
+                if activation_policy == "offload_acts":
+                    return pe.Offloadable(src="device", dst="pinned_host")
+                return pe.Saveable
+            return pe.Recompute
+        if activation_policy == "save_all" and s in SAVE_PRIMS:
+            return pe.Saveable
+        if (activation_policy == "save_collectives"
+                and s in COLLECTIVE_SAVE_PRIMS):
+            return pe.Saveable
+        return pe.Recompute
+
+    return policy
+
+
+def cache_placement_for_mode(mode: str) -> str:
+    return {"zero3": "regather", "zeropp": "device",
+            "fcdp": "host", "mics": "regather"}[mode]
+
+
+def checkpoint_layer(fn, mode: str, activation_policy: str = "save_all",
+                     host_offload: bool = True, placement: Optional[str] = None):
+    """Wrap a layer-apply function with the FCDP remat policy."""
+    pol = make_remat_policy(placement or cache_placement_for_mode(mode),
+                            activation_policy, host_offload)
+    return jax.checkpoint(fn, policy=pol)

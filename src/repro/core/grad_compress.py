@@ -1,0 +1,87 @@
+"""Beyond-paper optimization: int8 block-quantized gradient reduce over
+the DCN ('pod') axis, inspired by ZeRO++'s qgZ but expressed as a
+custom-VJP stage-1 gather whose transpose runs the reduce-scatter in
+int8 (half the DCN bytes of bf16).
+
+Forward is the ordinary stage-1 all-gather; only the backward collective
+is quantized. Quantization is symmetric per block of 256 elements along
+the flattened tensor.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 blockwise quantization over the flattened tensor."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_psum_scatter(g: jax.Array, axis_name: str, dim: int) -> jax.Array:
+    """Reduce-scatter over `axis_name` along `dim`, transported in int8.
+
+    Each rank splits g into n chunks along dim, quantizes, all_to_all's
+    the chunks so rank j receives every rank's chunk j, dequantizes and
+    sums. Result: the local shard of the reduced tensor.
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return g
+    # move dim to front and split into n chunks
+    g_moved = jnp.moveaxis(g, dim, 0)
+    lead = g_moved.shape[0]
+    assert lead % n == 0
+    chunk_elems = (lead // n) * math.prod(g_moved.shape[1:])
+    flat = g_moved.reshape(n, chunk_elems).astype(jnp.float32)
+    pad = (-chunk_elems) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    nb = flat.shape[1] // BLOCK                     # blocks per chunk
+    blocks = flat.reshape(n, nb, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=2, keepdims=True)
+                        / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    q_x = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                             tiled=True).reshape(n, nb, BLOCK)
+    s_x = jax.lax.all_to_all(scale.astype(jnp.float32), axis_name,
+                             split_axis=0, concat_axis=0,
+                             tiled=True).reshape(n, nb, 1)
+    vals = q_x.astype(jnp.float32) * s_x            # dequant
+    summed = jnp.sum(vals, axis=0).reshape(-1)      # reduce over sources
+    chunk_shape = (lead // n,) + g_moved.shape[1:]
+    out = summed[:chunk_elems].reshape(chunk_shape)
+    return jnp.moveaxis(out, 0, dim).astype(g.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def compressed_stage1_gather(w, axis_name: str, dim: int):
+    """all_gather over the pod axis whose *gradient* reduce-scatter is
+    int8-compressed."""
+    return jax.lax.all_gather(w, axis_name, axis=dim, tiled=True)
+
+
+def _fwd(w, axis_name, dim):
+    return compressed_stage1_gather(w, axis_name, dim), None
+
+
+def _bwd(axis_name, dim, _, g):
+    return (int8_psum_scatter(g, axis_name, dim),)
+
+
+compressed_stage1_gather.defvjp(_fwd, _bwd)

@@ -1,0 +1,179 @@
+"""Parameter partitioning: ZeRO-3 / MiCS / FCDP storage layouts.
+
+Every parameter is described by a ParamDef whose `dims` tag each array
+dimension with a logical role:
+
+  'stack' - scan-group dimension (never sharded)
+  'fsdp'  - ZeRO-3 sharding dimension (gathered per layer inside the step)
+  'tp'    - tensor/expert-parallel dimension (owned shard, never gathered)
+  None    - unsharded
+
+Storage layout per system mode (multi-pod mesh ('pod','data','model')):
+
+  zero3 / zeropp / fcdp : fsdp -> ('pod','data'), tp -> 'model'
+  mics                  : fsdp -> ('data',) [replicated over pod], tp -> 'model'
+  frozen (FCDP-Comm)    : fsdp -> ('data',) [replicated over pod], tp -> 'model'
+
+On the single-pod mesh ('data','model') there is no pod axis and the
+fsdp axes collapse to ('data',).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import fsdp_axes, inter_axis, intra_fsdp_axes
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed
+    init_scale: float = 1.0
+    frozen: bool = False          # FCDP-Comm classification (set by peft)
+    label: str = ""               # dotted path, filled by label_tree
+    # 'inter_only': ZeRO-shard only over the slow (pod) axis, keeping the
+    # tensor resident within the pod -- the weight-stationary trade for
+    # tensors whose per-step gather volume exceeds their resident size
+    # (MoE expert weights; beyond-paper, see EXPERIMENTS.md SSPerf)
+    fsdp_scope: str = "full"      # full | inter_only
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+    @property
+    def fsdp_dim(self) -> Optional[int]:
+        return self.dims.index("fsdp") if "fsdp" in self.dims else None
+
+    @property
+    def tp_dim(self) -> Optional[int]:
+        return self.dims.index("tp") if "tp" in self.dims else None
+
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable, tree, *rest):
+    return jax.tree.map(fn, tree, *rest, is_leaf=is_def)
+
+
+def label_tree(tree):
+    """Attach dotted-path labels to every ParamDef in the tree."""
+    paths_vals, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_def)
+    out = []
+    for path, pdef in paths_vals:
+        name = ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(replace(pdef, label=name))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Storage layout
+# ---------------------------------------------------------------------------
+
+def storage_fsdp_axes(mesh, mode: str, frozen: bool) -> Tuple[str, ...]:
+    """Which mesh axes the fsdp dim is sharded over in storage.
+
+    The pod-replicated cached layout for frozen params is FCDP-Comm's
+    mechanism and therefore applies only in fcdp mode; the zero3/zeropp
+    baselines treat frozen weights like any other (re-gathered over DCN
+    each iteration, as DeepSpeed does) -- that asymmetry IS the paper's
+    PEFT result. MiCS shards within the pod by design.
+    """
+    if mode == "mics" or (frozen and mode == "fcdp"):
+        return intra_fsdp_axes(mesh)      # pod-replicated cached layout
+    return fsdp_axes(mesh)                 # full ZeRO-3 sharding
+
+
+def effective_fsdp_axes(pdef: "ParamDef", mesh, mode: str) -> Tuple[str, ...]:
+    axes = storage_fsdp_axes(mesh, mode, pdef.frozen)
+    if pdef.fsdp_scope == "inter_only":
+        axes = tuple(a for a in axes if a == "pod")
+    return axes
+
+
+def storage_spec(pdef: ParamDef, mesh, mode: str, min_shard_size: int = 0) -> P:
+    entries: list = [None] * len(pdef.shape)
+    small = pdef.size() < min_shard_size
+    if pdef.tp_dim is not None:
+        entries[pdef.tp_dim] = "model"
+    if pdef.fsdp_dim is not None and not small:
+        axes = effective_fsdp_axes(pdef, mesh, mode)
+        if axes:
+            # only shard if divisible
+            degree = math.prod(mesh.shape[a] for a in axes)
+            if pdef.shape[pdef.fsdp_dim] % degree == 0:
+                entries[pdef.fsdp_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def spec_tree(defs, mesh, mode: str, min_shard_size: int = 0):
+    return tree_map_defs(
+        lambda d: storage_spec(d, mesh, mode, min_shard_size), defs)
+
+
+def sharding_tree(defs, mesh, mode: str, min_shard_size: int = 0):
+    return tree_map_defs(
+        lambda d: NamedSharding(mesh, storage_spec(d, mesh, mode, min_shard_size)),
+        defs)
+
+
+def shape_dtype_tree(defs, mesh, mode: str, min_shard_size: int = 0):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, d.dtype,
+            sharding=NamedSharding(mesh, storage_spec(d, mesh, mode, min_shard_size))),
+        defs)
+
+
+# ---------------------------------------------------------------------------
+# Initialization (smoke tests / examples only; dry-run never allocates)
+# ---------------------------------------------------------------------------
+
+def _init_one(key, pdef: ParamDef):
+    if pdef.init == "zeros":
+        return jnp.zeros(pdef.shape, pdef.dtype)
+    if pdef.init == "ones":
+        return jnp.ones(pdef.shape, pdef.dtype)
+    fan_in = pdef.shape[-2] if len(pdef.shape) >= 2 else pdef.shape[-1]
+    scale = pdef.init_scale / math.sqrt(max(fan_in, 1))
+    if pdef.init == "embed":
+        scale = pdef.init_scale * 0.02
+    return (jax.random.normal(key, pdef.shape, jnp.float32) * scale).astype(pdef.dtype)
+
+
+def init_params(defs, seed: int = 0, mesh=None, mode: str = "zero3",
+                min_shard_size: int = 0):
+    """Materialize parameters; with a mesh, place them in storage layout."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(jax.random.key(seed), max(len(leaves), 1))
+    vals = []
+    for k, d in zip(keys, leaves):
+        v = _init_one(k, d)
+        if mesh is not None:
+            v = jax.device_put(
+                v, NamedSharding(mesh, storage_spec(d, mesh, mode, min_shard_size)))
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def count_tree_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(d.size() for d in leaves)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

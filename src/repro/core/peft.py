@@ -1,0 +1,78 @@
+"""FCDP-Comm + LoRA: parameter classification into frozen base weights
+(W_f) and trainable adapters (W_t).
+
+Classification happens at init (paper §IV-E): frozen ParamDefs get
+``frozen=True``, which flips their storage layout to the cached layout
+(pod-replicated, intra-sharded -- see partition.storage_fsdp_axes) so
+their per-layer reconstruction never crosses DCN, and they receive no
+gradient / optimizer state.
+
+LoRA adds rank-r adapters to the attention projections (paper §V-D uses
+r=8 on q,k,v,o); the adapters keep the full ZeRO-3 treatment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SystemConfig
+from repro.core.partition import ParamDef, is_def, tree_map_defs
+
+LORA_TARGETS_IN_ATTN = ("wq", "wk", "wv", "wo")
+
+
+def freeze_all(defs):
+    """Mark every ParamDef frozen (serving layout / FCDP-Comm base)."""
+    return tree_map_defs(lambda d: dataclasses.replace(d, frozen=True), defs)
+
+
+def apply_lora(defs, cfg: ModelConfig, sys: SystemConfig):
+    """Freeze all base defs and inject trainable LoRA adapter defs into
+    every attention sublayer dict (keys: <target>_lora_a / _lora_b)."""
+    r = sys.lora_rank
+
+    def visit(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                out[k] = visit(v)
+            # inject adapters next to attention weights
+            if any(t in node for t in sys.lora_targets) and "wq" in node:
+                for t in sys.lora_targets:
+                    if t not in node:
+                        continue
+                    base: ParamDef = node[t]
+                    d_in, d_out = base.shape[-2], base.shape[-1]
+                    stack = base.shape[:-2]
+                    sdims = base.dims[:-2]
+                    # A: [in, r] follows the input dim's sharding role
+                    out[f"{t}_lora_a"] = ParamDef(
+                        stack + (d_in, r), sdims + (base.dims[-2], None),
+                        init="normal", init_scale=1.0)
+                    # B: [r, out] zero-init, follows the output dim's role
+                    out[f"{t}_lora_b"] = ParamDef(
+                        stack + (r, d_out), sdims + (None, base.dims[-1]),
+                        init="zeros")
+            return out
+        if is_def(node):
+            return dataclasses.replace(node, frozen=True)
+        if isinstance(node, (list, tuple)):
+            return type(node)(visit(v) for v in node)
+        return node
+
+    return visit(defs)
+
+
+def split_frozen_indices(defs) -> Tuple[List[int], List[int]]:
+    """Flat-leaf indices of (trainable, frozen) params."""
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    train = [i for i, d in enumerate(leaves) if not d.frozen]
+    frozen = [i for i, d in enumerate(leaves) if d.frozen]
+    return train, frozen
+
+
+def lora_scale(sys: SystemConfig) -> float:
+    return 2.0  # alpha/r with alpha = 2r (common default)

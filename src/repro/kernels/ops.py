@@ -1,0 +1,57 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Each op takes `interpret` (CPU-validated interpret mode vs real TPU
+lowering) and falls back to the pure-jnp oracle (`impl='jnp'`) -- the
+model code selects via SystemConfig.attn_impl etc.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softmax_scale",
+                                             "block_q", "block_k",
+                                             "interpret", "impl"))
+def flash_attention(q, k, v, causal: bool = True,
+                    softmax_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False, impl: str = "pallas"):
+    """q/k/v: [B, S, H, hd] (kv pre-expanded to H heads)."""
+    if impl == "jnp":
+        return kref.attention_ref(q, k, v, causal=causal,
+                                  softmax_scale=softmax_scale)
+    from repro.kernels.flash_attention import flash_attention_fwd
+    return flash_attention_fwd(
+        q, k, v, causal=causal, softmax_scale=softmax_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "impl"))
+def wkv6(r, k, v, logw, u, chunk: int = 64, interpret: bool = False,
+         impl: str = "pallas"):
+    """RWKV-6 WKV. r/k/v/logw: [B,S,H,hd]; u: [H,hd]."""
+    if impl == "jnp":
+        return kref.rwkv6_ref(r, k, v, logw, u)
+    from repro.kernels.rwkv6_scan import wkv6_chunked
+    return wkv6_chunked(r, k, v, logw, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "channel_block",
+                                             "interpret", "impl"))
+def ssm_scan(a, b, chunk: int = 128, channel_block: int = 512,
+             interpret: bool = False, impl: str = "pallas"):
+    """Diagonal SSM scan h_t = a_t h_{t-1} + b_t over [B,S,C]."""
+    if impl == "jnp":
+        B, S, C = a.shape
+        hs, _ = kref.mamba_scan_ref(a.reshape(B, S, C, 1),
+                                    b.reshape(B, S, C, 1))
+        return hs.reshape(B, S, C)
+    from repro.kernels.mamba_scan import mamba_scan
+    return mamba_scan(a, b, chunk=chunk, channel_block=channel_block,
+                      interpret=interpret)

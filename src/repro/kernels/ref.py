@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the ground truth
+the kernels are validated against (tests sweep shapes/dtypes with
+assert_allclose)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, softmax_scale=None):
+    """Naive full-materialization attention. q/k/v: [B, S, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = softmax_scale or (1.0 / math.sqrt(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        mask = kpos <= qpos
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Sequential RWKV-6 WKV recurrence (exact). r/k/v/logw: [B,S,H,hd],
+    u: [H,hd]. Returns ([B,S,H,hd], final state [B,H,hd,hd]).
+
+    o_t = r_t @ (S + u*outer(k_t, v_t));  S <- diag(w_t) S + outer(k_t, v_t)
+    """
+    B, S, H, hd = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    sf, outs = jax.lax.scan(
+        step, s0, (rf.swapaxes(0, 1), kf.swapaxes(0, 1),
+                   vf.swapaxes(0, 1), wf.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).astype(r.dtype), sf
+
+
+def mamba_scan_ref(a, b, h0=None):
+    """Sequential diagonal-SSM scan. a, b: [B, S, D, N] (decay, input);
+    h_t = a_t * h_{t-1} + b_t. Returns (all states [B,S,D,N], h_last)."""
+    B, S, D, N = a.shape
+    h0 = jnp.zeros((B, D, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hl, hs = jax.lax.scan(
+        step, h0, (a.astype(jnp.float32).swapaxes(0, 1),
+                   b.astype(jnp.float32).swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hl
+
+
+def int8_quant_ref(x, block: int = 256):
+    """Blockwise symmetric int8 quantization oracle."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+                        / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = x.size
+    return q, scale, deq[:n].reshape(x.shape)

@@ -1,0 +1,118 @@
+"""RWKV-6 WKV chunked recurrence kernel (Pallas, TPU target).
+
+TPU adaptation of the CUDA wkv6 kernel: instead of one thread per
+channel, each grid program owns one (batch, head) pair and walks the
+sequence in VMEM-resident chunks. The per-chunk math is the same
+chunked-linear-attention decomposition used by the jnp path
+(models/sublayers._wkv_chunked): intra-chunk scores via an MXU matmul
+with per-channel decay ratios, inter-chunk via the carried [hd, hd]
+state held in VMEM scratch across the sequential chunk grid dimension.
+
+All decay ratios are exponentials of non-positive log sums, so every
+factor is <= 1 -- no overflow for any chunk length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_out_ref,
+                s_scr, *, chunk: int, hd: int):
+    """Grid: (B*H, num_chunks); chunk dim is sequential (carries state)."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # [c, hd]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)     # log decay, <= 0
+    u = u_ref[0, 0].astype(jnp.float32)       # [hd]
+
+    cw = jnp.cumsum(lw, axis=0)               # [c, hd]
+    cw_prev = cw - lw
+    S0 = s_scr[...]                           # [hd, hd]
+
+    # inter-chunk
+    q = r * jnp.exp(cw_prev)
+    o_inter = jax.lax.dot_general(q, S0, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk: A[t,i] = sum_ch r[t]k[i] exp(cw_prev[t]-cw[i]), i<t.
+    # Exact masked-log-ratio form: exponents are masked to the i<t region
+    # BEFORE exponentiation, so every factor is <= 1 for arbitrarily
+    # strong decays (the factorized q@k^T form overflows for w -> 0).
+    # VMEM cost: one [c, c, hd] f32 tile (1 MiB at c=hd=64).
+    ratio_log = cw_prev[:, None, :] - cw[None, :, :]        # [t, i, hd]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, ratio_log.shape, 0)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, ratio_log.shape, 1)
+    ratio_log = jnp.where(i_idx < t_idx, ratio_log, -1e30)
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * jnp.exp(ratio_log), axis=2)
+    o_intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # diagonal u-bonus
+    diag = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)
+    o = o_inter + o_intra + diag * v
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(cw_c)) S0 + sum_i outer(k_i e^{cw_c-cw_i}, v_i)
+    cw_c = cw[-1]                              # [hd]
+    kds = k * jnp.exp(cw_c[None, :] - cw)
+    s_new = jnp.exp(cw_c)[:, None] * S0 + jax.lax.dot_general(
+        kds, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit_state():
+        s_out_ref[0] = s_new
+
+
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64,
+                 interpret: bool = False):
+    """r/k/v/logw: [B, S, H, hd]; u: [H, hd].
+    Returns ([B, S, H, hd], final_state [B, H, hd, hd]).
+
+    Note: the normalized intra-chunk factorization trades one exactness
+    property (per-pair decay ratios) for MXU-friendly matmuls; ratios are
+    renormalized to the chunk start so all factors stay <= e^{|lw_0|}.
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    # [B,S,H,hd] -> [B*H, n, chunk, hd]
+    def rs(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, n, chunk, hd)
+    rr, kk, vv, ww = rs(r), rs(k), rs(v), rs(logw)
+    uu = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, hd=hd)
+    out, s_out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, n, chunk, hd), r.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu)
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return out, s_out.reshape(B, H, hd, hd)

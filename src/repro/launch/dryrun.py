@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, print memory/cost analysis, and persist
+roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --cell train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mode zero3
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (RunConfig, SystemConfig, shape_cell,
+                                SHAPE_CELLS)
+from repro.configs.registry import (ARCH_IDS, cell_supported, get_config)
+from repro.core.stepfn import StepBundle
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (collect_collectives, flops_bytes_from_jaxpr,
+                                   parse_stablehlo_counts, roofline_report)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results"
+
+
+def _mesh_sizes(mesh):
+    return {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
+                mode: str = "fcdp", system_overrides=None,
+                verbose: bool = True):
+    cfg = get_config(arch)
+    cell = shape_cell(cell_name)
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        return {"arch": arch, "cell": cell_name, "multi_pod": multi_pod,
+                "mode": mode, "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # block_io (full activation remat) is the HBM-fitting default on
+    # 16 GB v5e at the assigned shapes; the paper-faithful save_all
+    # variant is compared in benchmarks/bench_memory.py (see EXPERIMENTS.md)
+    sysc = SystemConfig(mode=mode, loss_chunk=2048,
+                        activation_policy="block_io")
+    if system_overrides:
+        sysc = sysc.replace(**system_overrides)
+    run = RunConfig(model=cfg, shape=cell, system=sysc)
+    t0 = time.time()
+    bundle = StepBundle(run, mesh)
+    seq_sharded = (cell.name == "long_500k")
+    if cell.kind == "train":
+        step = bundle.make_train_step()
+        sds = bundle.train_input_sds()
+    elif cell.kind == "prefill":
+        step = bundle.make_prefill_step()
+        sds = bundle.prefill_input_sds()
+    else:
+        step = bundle.make_decode_step(seq_sharded=seq_sharded)
+        sds = bundle.decode_input_sds(seq_sharded=seq_sharded)
+
+    lowered = step.lower(*sds)
+    t_lower = time.time() - t0
+    slo_counts = parse_stablehlo_counts(lowered.as_text())
+    # jaxpr walk for exact collective accounting (axis attribution + scan
+    # trip counts; compiled HLO on CPU CSEs remat'd gathers, so the jaxpr
+    # is the faithful source -- see DESIGN.md)
+    closed = step.trace(*sds).jaxpr
+    n_chips = mesh.devices.size
+    stats = collect_collectives(closed, _mesh_sizes(mesh))
+    flops_exact, bytes_naive = flops_bytes_from_jaxpr(closed, n_chips)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops_ca = float(ca.get("flops", 0.0))     # lower bound: loops counted 1x
+    bytes_ca = float(ca.get("bytes accessed", 0.0))
+    rep = roofline_report(flops_exact, bytes_naive, stats, cfg, cell, n_chips)
+    result = {
+        "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
+        "mode": mode, "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_est_bytes": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "flops_per_chip": flops_exact,
+        "bytes_per_chip": bytes_naive,
+        "flops_cost_analysis": flops_ca,
+        "bytes_cost_analysis": bytes_ca,
+        "stablehlo_collectives": slo_counts,
+        "roofline": rep,
+    }
+    if verbose:
+        mem = result["memory"]
+        print(f"[{arch} x {cell_name} x {'2pod' if multi_pod else '1pod'} "
+              f"x {mode}] compile={t_compile:.1f}s "
+              f"args={mem['argument_bytes']/2**30:.2f}GiB "
+              f"temp={mem['temp_bytes']/2**30:.2f}GiB "
+              f"flops/chip={flops_exact:.3e} "
+              f"dom={rep['dominant']} roofline={rep['roofline_fraction']:.3f}")
+        print(f"  memory_analysis: {ma}")
+        print(f"  cost_analysis (1x-loop lower bounds): "
+              f"flops={flops_ca:.4g} bytes={bytes_ca:.4g}")
+    del compiled, lowered, step, bundle
+    gc.collect()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--cell", default=None,
+                    choices=[c.name for c in SHAPE_CELLS] + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--mode", default="fcdp",
+                    choices=["zero3", "zeropp", "fcdp", "mics"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x cell) on both meshes")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    results = []
+    if args.all:
+        combos = [(a, c.name, mp) for a in ARCH_IDS for c in SHAPE_CELLS
+                  for mp in (False, True)]
+    else:
+        archs = [args.arch] if args.arch else list(ARCH_IDS)
+        cells = [args.cell] if args.cell else [c.name for c in SHAPE_CELLS]
+        pods = []
+        if args.multi_pod or not args.single_pod:
+            pods.append(True)
+        if args.single_pod or not args.multi_pod:
+            pods.append(False)
+        combos = [(a, c, mp) for a in archs for c in cells for mp in pods]
+
+    failures = 0
+    for arch, cell, mp in combos:
+        try:
+            r = dryrun_cell(arch, cell, mp, args.mode)
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            r = {"arch": arch, "cell": cell, "multi_pod": mp,
+                 "mode": args.mode, "status": "FAILED",
+                 "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        results.append(r)
+        if r["status"] == "skipped":
+            print(f"[{arch} x {cell} x {'2pod' if mp else '1pod'}] "
+                  f"SKIP: {r['reason']}")
+
+    out = args.out or (RESULTS_DIR / f"dryrun_{args.mode}.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {out}; {len(results)} cells, {failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+
+Mesh semantics:
+  pod   - crosses DCN (slow inter-pod links). FCDP's "inter-node" axis.
+  data  - intra-pod ICI; batch / ZeRO sharding. FCDP's "intra-node" axis.
+  model - intra-pod ICI; tensor/expert parallelism.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh with Auto axis types (smoke tests, elastic re-mesh)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_smoke_mesh(n_devices: Optional[int] = None):
+    """Tiny mesh over locally available devices for CPU smoke tests."""
+    n = n_devices or len(jax.devices())
+    model = math.gcd(n, 2)
+    data = n // model
+    return make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def fsdp_axes(mesh) -> Tuple[str, ...]:
+    """Axes over which ZeRO-3 shards parameters (all non-model axes)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def inter_axis(mesh) -> Optional[str]:
+    """The slow (DCN) axis, if present."""
+    return "pod" if "pod" in mesh.axis_names else None
+
+
+def intra_fsdp_axes(mesh) -> Tuple[str, ...]:
+    """Fast (ICI) fsdp axes: what FCDP re-gathers over in the backward."""
+    return tuple(a for a in mesh.axis_names if a not in ("model", "pod"))
+
+
+def dp_degree(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in fsdp_axes(mesh))
+
+
+def tp_degree(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,310 @@
+"""Roofline-term derivation from a lowered/compiled dry-run cell.
+
+Three terms (seconds), per §Roofline of EXPERIMENTS.md:
+
+  compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+  memory     = HLO_bytes_per_chip / HBM_BW
+  collective = ICI bytes/chip / ICI_BW  (+ DCN bytes/chip / DCN_BW, reported
+               separately -- the 'pod' axis crosses DCN)
+
+Collective bytes come from walking the traced jaxpr (exact axis
+attribution, scan trip counts multiplied in); a StableHLO text parse
+cross-checks op counts, since compiled HLO on the CPU backend CSEs
+remat'd gathers.
+
+Cost models (per-device bytes moved, ring algorithms):
+  all_gather     (n-1)/n * result_bytes
+  psum_scatter   (n-1)/n * operand_bytes
+  psum           2(n-1)/n * operand_bytes
+  all_to_all     (n-1)/n * operand_bytes
+  ppermute       operand_bytes
+Multi-axis collectives are attributed hierarchically: the ICI axes see
+the full payload, the DCN ('pod') stage sees payload/prod(ici_sizes).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+# TPU v5e-ish hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (prompt-specified)
+DCN_BW = 25e9                # bytes/s per chip across pods (assumed, fixed
+                             # across systems so comparisons are fair)
+
+COLLECTIVE_PRIMS = {
+    "all_gather": "all_gather",
+    "all_gather_invariant": "all_gather",
+    "psum": "psum",
+    "psum2": "psum",
+    "psum_invariant": "psum",
+    "psum_scatter": "psum_scatter",
+    "reduce_scatter": "psum_scatter",
+    "all_to_all": "all_to_all",
+    "ppermute": "ppermute",
+    "pbroadcast": "ppermute",
+}
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device byte totals by axis-kind and op."""
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    by_op: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    by_axis: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    by_op_axis: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    count: int = 0
+
+    def add(self, op: str, axis: str, nbytes: float, is_dcn: bool):
+        if is_dcn:
+            self.dcn_bytes += nbytes
+        else:
+            self.ici_bytes += nbytes
+        self.by_op[op] += nbytes
+        self.by_axis[axis] += nbytes
+        self.by_op_axis[f"{op}/{axis}"] += nbytes
+        self.count += 1
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape) * aval.dtype.itemsize)
+    except Exception:
+        return 0.0
+
+
+def _axis_tuple(params: Dict[str, Any]) -> Tuple[str, ...]:
+    for key in ("axis_name", "axes", "axis_index_groups_axis", "named_axes"):
+        v = params.get(key)
+        if v is None:
+            continue
+        if isinstance(v, (tuple, list)):
+            names = tuple(a for a in v if isinstance(a, str))
+            if names:
+                return names
+        elif isinstance(v, str):
+            return (v,)
+        elif isinstance(v, dict):
+            names = tuple(a for a in v if isinstance(a, str))
+            if names:
+                return names
+    return ()
+
+
+def collect_collectives(jaxpr, mesh_sizes: Dict[str, int]) -> CollectiveStats:
+    """Walk a (closed) jaxpr, summing per-device collective bytes."""
+    stats = CollectiveStats()
+
+    def visit(jx, mult: float):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            # recurse into sub-jaxprs
+            if name == "scan":
+                visit(eqn.params["jaxpr"].jaxpr,
+                      mult * eqn.params.get("length", 1))
+                continue
+            if name == "while":
+                body = eqn.params.get("body_jaxpr")
+                if body is not None:
+                    visit(body.jaxpr, mult)  # unknown trips: count once
+                continue
+            if name == "cond":
+                for br in eqn.params.get("branches", []):
+                    visit(br.jaxpr, mult)
+                continue
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None:
+                visit(sub.jaxpr if hasattr(sub, "jaxpr") else sub, mult)
+                continue
+            kind = COLLECTIVE_PRIMS.get(name)
+            if kind is None:
+                continue
+            axes = _axis_tuple(eqn.params)
+            if not axes:
+                continue
+            if kind == "all_gather":
+                payload = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            else:
+                payload = sum(_aval_bytes(v.aval) for v in eqn.invars
+                              if hasattr(v, "aval"))
+            # hierarchical attribution over the named axes
+            ici_axes = [a for a in axes if a != "pod"]
+            dcn_axes = [a for a in axes if a == "pod"]
+            ici_n = math.prod(mesh_sizes.get(a, 1) for a in ici_axes) or 1
+            for a in ici_axes:
+                n = mesh_sizes.get(a, 1)
+                if n <= 1:
+                    continue
+                factor = {"all_gather": (n - 1) / n,
+                          "psum_scatter": (n - 1) / n,
+                          "psum": 2 * (n - 1) / n,
+                          "all_to_all": (n - 1) / n,
+                          "ppermute": 1.0}[kind]
+                stats.add(kind, a, mult * factor * payload, is_dcn=False)
+            for a in dcn_axes:
+                n = mesh_sizes.get(a, 1)
+                if n <= 1:
+                    continue
+                factor = {"all_gather": (n - 1) / n,
+                          "psum_scatter": (n - 1) / n,
+                          "psum": 2 * (n - 1) / n,
+                          "all_to_all": (n - 1) / n,
+                          "ppermute": 1.0}[kind]
+                # DCN stage moves the ICI-reduced payload
+                stats.add(kind, a, mult * factor * payload / ici_n,
+                          is_dcn=True)
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, 1.0)
+    return stats
+
+
+def flops_bytes_from_jaxpr(jaxpr, n_chips: int) -> Tuple[float, float]:
+    """Exact per-device FLOPs (dot_general/conv) and naive HBM bytes from
+    the traced jaxpr, with scan trip counts multiplied in.
+
+    XLA's compiled cost_analysis counts while-loop bodies ONCE, so scanned
+    layer stacks are undercounted by ~num_layers; this walker is the
+    faithful source. Bytes are an upper bound (per-eqn operand+result
+    sizes, no fusion credit); cost_analysis 'bytes accessed' is the
+    corresponding lower bound. Eqns outside shard_map carry global shapes
+    and are scaled by 1/n_chips.
+    """
+    total_flops = 0.0
+    total_bytes = 0.0
+
+    # HBM-traffic model: count operand+result bytes of the ops whose
+    # operands genuinely stream from HBM (matmuls, convs, gathers/scatters,
+    # cache updates, collectives); elementwise chains are assumed fused
+    # into their producers (XLA does this), else the norm upcasts would
+    # dominate and every cell would look memory-bound.
+    MAJOR_BYTES_PRIMS = {
+        "dot_general", "conv_general_dilated", "gather", "scatter",
+        "scatter-add", "scatter_add", "dynamic_update_slice",
+        "dynamic_slice", "sort", "take", "cumsum", "cumlogsumexp",
+        "all_gather", "all_gather_invariant", "psum", "psum2",
+        "psum_invariant", "psum_scatter", "all_to_all", "ppermute",
+    }
+
+    def eqn_bytes(eqn) -> float:
+        b = 0.0
+        for v in eqn.invars:
+            if hasattr(v, "aval"):
+                b += _aval_bytes(v.aval)
+        for v in eqn.outvars:
+            b += _aval_bytes(v.aval)
+        return b
+
+    def visit(jx, mult: float, scale: float):
+        nonlocal total_flops, total_bytes
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name == "scan":
+                visit(eqn.params["jaxpr"].jaxpr, mult * eqn.params.get("length", 1),
+                      scale)
+                continue
+            if name == "while":
+                body = eqn.params.get("body_jaxpr")
+                if body is not None:
+                    visit(body.jaxpr, mult, scale)
+                continue
+            if name == "cond":
+                brs = eqn.params.get("branches", [])
+                if brs:
+                    visit(brs[0].jaxpr, mult, scale)  # count one branch
+                continue
+            if name == "shard_map":
+                sub = eqn.params.get("jaxpr")
+                visit(sub.jaxpr if hasattr(sub, "jaxpr") else sub, mult, 1.0)
+                continue
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None:
+                visit(sub.jaxpr if hasattr(sub, "jaxpr") else sub, mult, scale)
+                continue
+            if name == "dot_general":
+                dnums = eqn.params["dimension_numbers"]
+                (lc, rc), _ = dnums
+                lhs = eqn.invars[0].aval
+                out = eqn.outvars[0].aval
+                k = 1
+                for d in lc:
+                    k *= lhs.shape[d]
+                total_flops += scale * mult * 2.0 * float(np.prod(out.shape)) * k
+                total_bytes += scale * mult * eqn_bytes(eqn)
+            elif name == "conv_general_dilated":
+                out = eqn.outvars[0].aval
+                rhs = eqn.invars[1].aval
+                total_flops += scale * mult * 2.0 * float(
+                    np.prod(out.shape)) * float(np.prod(rhs.shape[1:]))
+                total_bytes += scale * mult * eqn_bytes(eqn)
+            elif name in MAJOR_BYTES_PRIMS:
+                total_bytes += scale * mult * eqn_bytes(eqn)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, 1.0, 1.0 / n_chips)
+    return total_flops, total_bytes
+
+
+def parse_stablehlo_counts(text: str) -> Dict[str, int]:
+    """Cross-check: op counts in the lowered StableHLO."""
+    ops = re.findall(
+        r"stablehlo\.(all_gather|reduce_scatter|all_reduce|all_to_all|"
+        r"collective_permute)", text)
+    out: Dict[str, int] = defaultdict(int)
+    for o in ops:
+        out[o] += 1
+    return dict(out)
+
+
+def model_flops(cfg, cell, n_chips: int) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) tokens rule; decode counts one
+    token per sequence."""
+    from repro.models.registry import count_params
+    n_active = count_params(cfg, active_only=True)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    tokens = cell.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def roofline_report(flops_per_chip: float, bytes_per_chip: float,
+                    stats: CollectiveStats, cfg, cell,
+                    n_chips: int) -> Dict[str, Any]:
+    compute_t = flops_per_chip / PEAK_FLOPS
+    memory_t = bytes_per_chip / HBM_BW
+    ici_t = stats.ici_bytes / ICI_BW
+    dcn_t = stats.dcn_bytes / DCN_BW
+    coll_t = ici_t + dcn_t
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell, n_chips)
+    hlo_total = flops_per_chip * n_chips
+    return {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "ici_s": ici_t,
+        "dcn_s": dcn_t,
+        "dominant": dominant,
+        "step_time_lb_s": max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) / max(
+            max(terms.values()), 1e-30),
+        "ici_bytes_per_chip": stats.ici_bytes,
+        "dcn_bytes_per_chip": stats.dcn_bytes,
+        "coll_by_op": dict(stats.by_op),
+        "coll_by_axis": dict(stats.by_axis),
+        "n_collectives": stats.count,
+    }

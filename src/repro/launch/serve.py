@@ -1,0 +1,90 @@
+"""Serving launcher: batched prefill + decode with the FCDP-Comm frozen
+parameter layout (pod-replicated, intra-sharded -- zero DCN bytes per
+token).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+      --prompt-len 64 --gen-len 32 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig, ShapeCell, SystemConfig, shape_cell
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.stepfn import StepBundle
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_smoke_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    max_len = args.prompt_len + args.gen_len
+    cell = ShapeCell("serve", "decode", max_len, args.batch)
+    run = RunConfig(model=cfg, shape=cell,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+    bundle = StepBundle(run, mesh)
+    params = bundle.init_all_params(seed=0)
+
+    prefill = bundle.make_prefill_step()
+    decode = bundle.make_decode_step()
+    state = bundle.init_state(cell)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    t0 = time.time()
+    if cfg.num_encoder_layers > 0:
+        enc = jnp.asarray(rng.standard_normal(
+            (args.batch, max(args.prompt_len // 4, 8), cfg.d_model)),
+            jnp.bfloat16)
+        logits, state = prefill(params, enc, prompts, state)
+    else:
+        logits, state = prefill(params, prompts, state)
+    t_prefill = time.time() - t0
+
+    # vocab is TP-sharded: argmax across shards via full gather of the
+    # (small) per-rank argmax candidates
+    def pick(logits_sharded):
+        full = jax.jit(lambda x: x, out_shardings=jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()))(logits_sharded)
+        return jnp.argmax(full, axis=-1).astype(jnp.int32)
+
+    tok = pick(logits)[:, None]
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.gen_len - 1):
+        logits, state = decode(params, tok, state)
+        tok = pick(logits)[:, None]
+        generated.append(tok)
+    t_decode = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    toks_per_s = args.batch * (args.gen_len - 1) / max(t_decode, 1e-9)
+    print(f"prefill {args.prompt_len} toks x{args.batch}: {t_prefill:.2f}s")
+    print(f"decode: {toks_per_s:.1f} tok/s (batch {args.batch})")
+    print(f"sample continuation ids[0,:16]: {np.asarray(out[0, :16])}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

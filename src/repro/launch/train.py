@@ -1,0 +1,145 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 50 --mode fcdp
+
+--smoke runs the reduced config of the same family on the local CPU
+devices; the full configs target the production meshes (dry-run them
+with repro.launch.dryrun). Includes checkpoint/restart, heartbeat,
+straggler monitoring, and optional failure injection (--fail-at).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
+                                SystemConfig, shape_cell)
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.stepfn import StepBundle
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.optim.adamw import init_opt_state
+from repro.runtime.fault_tolerance import (FailureInjector, HeartbeatMonitor,
+                                           StragglerMonitor,
+                                           run_with_restarts)
+
+
+def build(args):
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_smoke_mesh()
+        cell = ShapeCell("smoke_train", "train", args.seq_len or 128,
+                         args.batch or 8)
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        cell = shape_cell(args.cell)
+    sysc = SystemConfig(mode=args.mode, peft=args.peft,
+                        activation_policy=args.activation_policy,
+                        loss_chunk=args.loss_chunk,
+                        min_shard_size=8 if args.smoke else 2048,
+                        grad_compress=args.grad_compress)
+    run = RunConfig(model=cfg, shape=cell, system=sysc,
+                    optimizer=OptimizerConfig(
+                        lr=args.lr, total_steps=args.steps,
+                        warmup_steps=max(args.steps // 20, 1)),
+                    microbatch=args.microbatch)
+    return RunState(run, mesh, args)
+
+
+class RunState:
+    def __init__(self, run, mesh, args):
+        self.run, self.mesh, self.args = run, mesh, args
+        self.bundle = StepBundle(run, mesh)
+        self.step_fn = self.bundle.make_train_step()
+        params = self.bundle.init_all_params(seed=run.seed)
+        self.train_p, self.frozen_p = self.bundle.split(params)
+        self.opt = jax.jit(functools.partial(
+            init_opt_state, sys=run.system))(self.train_p)
+        ds = SyntheticPackedLM(run.model, run.shape, DataConfig(run.seed))
+        enc_dim = run.model.d_model if run.model.num_encoder_layers else 0
+        self.loader = ShardedLoader(ds, mesh,
+                                    self.bundle.batch_spec(run.shape),
+                                    enc_embed_dim=enc_dim)
+        self.metrics_log = []
+
+    def state_tree(self):
+        return {"params": self.train_p, "opt": self.opt}
+
+    def load_state(self, tree):
+        self.train_p, self.opt = tree["params"], tree["opt"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--cell", default="train_4k")
+    ap.add_argument("--mode", default="fcdp",
+                    choices=["zero3", "zeropp", "fcdp", "mics"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--peft", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--activation-policy", default="save_all")
+    ap.add_argument("--grad-compress", default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    st = build(args)
+    ckpt = Checkpointer(args.ckpt_dir)
+    injector = FailureInjector(fail_at_steps=tuple(args.fail_at))
+    monitor = StragglerMonitor()
+    hb = HeartbeatMonitor(timeout_s=600).start()
+
+    def do_step(step: int):
+        injector.maybe_fail(step)
+        batch = st.loader.get(step)
+        st.train_p, st.opt, m = st.step_fn(st.train_p, st.frozen_p,
+                                           st.opt, batch)
+        loss = float(m["loss"])
+        st.metrics_log.append({"step": step, "loss": loss,
+                               "grad_norm": float(m["grad_norm"])})
+        if step % max(args.steps // 20, 1) == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+
+    def save(step: int):
+        ckpt.save(step, st.state_tree(), blocking=False)
+
+    def restore() -> int:
+        latest = ckpt.latest_step()
+        if latest is None:
+            return 0
+        st.load_state(ckpt.restore(latest, st.state_tree()))
+        print(f"restored checkpoint at step {latest}")
+        return latest
+
+    t0 = time.time()
+    result = run_with_restarts(
+        args.steps, do_step, save, restore,
+        checkpoint_every=args.ckpt_every, monitor=monitor, heartbeat=hb)
+    hb.stop()
+    ckpt.wait()
+    dt = time.time() - t0
+    toks = args.steps * st.run.shape.global_batch * st.run.shape.seq_len
+    print(f"done: {result} | {dt:.1f}s | {toks/dt:.0f} tok/s | "
+          f"final loss {st.metrics_log[-1]['loss']:.4f}")
+    return st
+
+
+if __name__ == "__main__":
+    main()

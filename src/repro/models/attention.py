@@ -1,0 +1,277 @@
+"""Attention: GQA/MQA with chunked (flash-style) jnp implementation,
+plus decode paths (batch-sharded KV and sequence-sharded KV for
+long-context with partial-softmax psum reconstruction).
+
+TP layout: q heads column-parallel over 'model' (padded to a multiple of
+tp); K/V projections replicated over 'model' (GQA kv-head counts are not
+divisible by tp=16 for most assigned archs), ZeRO-sharded like all
+params. Padding heads are masked to zero so they neither contribute
+output nor receive gradient.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (MeshInfo, local_head_mask, psum_tp,
+                                 psum_tp_act)
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, n_rep: int):
+    """[B,S,KVH,hd] -> [B,S,KVH*n_rep,hd] by repeating each kv head."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def kv_span(h_local: int, n_rep: int, n_kv: int) -> int:
+    """Static count of kv heads one TP rank's q heads touch."""
+    if n_rep <= 0:
+        return n_kv
+    aligned = (h_local % n_rep == 0) or (n_rep % h_local == 0)
+    span = max(h_local // n_rep, 1) + (0 if aligned else 1)
+    return min(span, n_kv)
+
+
+def slice_expand_kv(k_all, v_all, h_local: int, n_rep: int, mi: MeshInfo):
+    """Produce this TP rank's [B,S,h_local,hd] expanded K/V without ever
+    materializing the full expanded tensor: slice the (at most
+    ceil((h_local-1)/n_rep)+1) kv heads this rank's q heads map onto,
+    expand only those, then slice the exact local head range."""
+    n_kv = k_all.shape[2]
+    rank_start = jax.lax.axis_index("model") * h_local
+    span = kv_span(h_local, n_rep, n_kv)
+    kv_first = jnp.minimum(rank_start // n_rep, n_kv - span)
+    k_loc = jax.lax.dynamic_slice_in_dim(k_all, kv_first, span, axis=2)
+    v_loc = jax.lax.dynamic_slice_in_dim(v_all, kv_first, span, axis=2)
+    off = rank_start - kv_first * n_rep
+    k_exp = jax.lax.dynamic_slice_in_dim(
+        _expand_kv(k_loc, n_rep), off, h_local, axis=2)
+    v_exp = jax.lax.dynamic_slice_in_dim(
+        _expand_kv(v_loc, n_rep), off, h_local, axis=2)
+    return k_exp, v_exp
+
+
+def chunked_causal_attention(q, k, v, *, q_chunk: int = 1024,
+                             kv_chunk: int = 1024, causal: bool = True,
+                             softmax_scale: Optional[float] = None,
+                             q_offset: int = 0):
+    """Flash-style attention in pure jnp: O(chunk^2) live memory.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, H, hd] (kv already head-expanded).
+    q_offset: absolute position of q[0] relative to k[0] (for prefill
+    continuation); causal masking uses absolute positions.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = softmax_scale or (1.0 / math.sqrt(hd))
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    # pad to multiples
+    if Sq % q_chunk:
+        q = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    if Skv % kv_chunk:
+        pad = nk * kv_chunk - Skv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qs = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)  # [nq,B,H,qc,hd]
+    ks = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+    kv_pos = (jnp.arange(nk * kv_chunk)).reshape(nk, kv_chunk)
+
+    def q_block(qi_qc):
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, inp):
+            m, l, acc = carry
+            kc, vc, kpos = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            mask = kpos[None, None, None, :] < Skv  # kv padding
+            if causal:
+                mask = mask & (kpos[None, None, None, :] <= q_pos[None, None, :, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        from repro.models.common import pvary_like
+        m0 = pvary_like(jnp.full((B, H, q_chunk), NEG_INF, jnp.float32), qc)
+        m0 = pvary_like(m0, ks)
+        l0 = pvary_like(pvary_like(
+            jnp.zeros((B, H, q_chunk), jnp.float32), qc), ks)
+        a0 = pvary_like(pvary_like(
+            jnp.zeros((B, H, q_chunk, hd), jnp.float32), qc), ks)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kv_pos))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out  # [B,H,qc,hd]
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), qs))        # [nq,B,H,qc,hd]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _lora_term(x, lora, name, scale):
+    a = lora.get(f"{name}_lora_a") if lora else None
+    if a is None:
+        return None
+    b = lora[f"{name}_lora_b"]
+    return ((x @ a) @ b) * scale
+
+
+def attention_block(x, wq, wk, wv, wo, bq, bk, bv, cfg, mi: MeshInfo,
+                    positions, attn_impl: str = "jnp",
+                    kv_cache: Optional[Tuple] = None,
+                    q_norm=None, k_norm=None, lora=None,
+                    lora_alpha: float = 2.0, causal: bool = True):
+    """Full attention sublayer on local shards.
+
+    x: [B, S, D]. wq: [D, Hpad_local*hd]; wk/wv: [D, KVH*hd] (replicated
+    over model); wo: [Hpad_local*hd, D]. Returns ([B,S,D], new_kv).
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim()
+    n_kv = cfg.num_kv_heads
+    h_local = wq.shape[1] // hd
+    padded_heads = h_local * mi.tp
+
+    q = x @ wq
+    if bq is not None:
+        q = q + bq
+    k = x @ wk
+    v = x @ wv
+    if bk is not None:
+        k = k + bk
+    if bv is not None:
+        v = v + bv
+    for name, ref in (("wq", "q"), ("wk", "k"), ("wv", "v")):
+        t = _lora_term(x, lora, name, lora_alpha)
+        if t is not None:
+            if ref == "q":
+                q = q + t.astype(q.dtype)
+            elif ref == "k":
+                k = k + t.astype(k.dtype)
+            else:
+                v = v + t.astype(v.dtype)
+    q = q.reshape(B, S, h_local, hd)
+    k = k.reshape(B, S, n_kv, hd)
+    v = v.reshape(B, S, n_kv, hd)
+    if q_norm is not None:  # chameleon-style qk-norm
+        from repro.models.layers import rms_norm
+        q = rms_norm(q, q_norm, cfg.norm_eps)
+        k = rms_norm(k, k_norm, cfg.norm_eps)
+    q = apply_rope_heads(q, positions, cfg.rope_theta)
+    k = apply_rope_heads(k, positions, cfg.rope_theta)
+
+    if padded_heads % n_kv != 0:
+        raise ValueError(
+            f"padded heads {padded_heads} not divisible by kv heads {n_kv}")
+    n_rep = padded_heads // n_kv
+
+    new_cache = None
+    if kv_cache is not None:
+        # TP-sharded KV cache: each rank stores only the kv_span heads its
+        # q heads read (cache local shape [B, S_max, span, hd]); fresh K/V
+        # are sliced before the write so the full cache never materializes.
+        k_cache, v_cache, cache_index = kv_cache
+        span = k_cache.shape[2]
+        if span < n_kv or mi.tp > 1:
+            rank_start = (jax.lax.axis_index("model") * h_local
+                          if mi.tp > 1 else 0)
+            kv_first = jnp.minimum(rank_start // n_rep, n_kv - span)
+            k_w = jax.lax.dynamic_slice_in_dim(k, kv_first, span, axis=2)
+            v_w = jax.lax.dynamic_slice_in_dim(v, kv_first, span, axis=2)
+            off = rank_start - kv_first * n_rep
+        else:
+            k_w, v_w, off = k, v, 0
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_w.astype(k_cache.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_w.astype(v_cache.dtype), cache_index, axis=1)
+        new_cache = (k_cache, v_cache, cache_index + S)
+        q_offset = cache_index
+        k_exp = jax.lax.dynamic_slice_in_dim(
+            _expand_kv(k_cache, n_rep), off, h_local, axis=2)
+        v_exp = jax.lax.dynamic_slice_in_dim(
+            _expand_kv(v_cache, n_rep), off, h_local, axis=2)
+    else:
+        q_offset = 0
+        k_exp, v_exp = slice_expand_kv(k, v, h_local, n_rep, mi)
+
+    if attn_impl in ("pallas", "pallas_interpret") and causal and kv_cache is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q, k_exp, v_exp, causal=True,
+            interpret=(attn_impl == "pallas_interpret"))
+    else:
+        # inner remat: recompute attention internals in the backward from
+        # (q, k, v), exactly like FlashAttention -- without this the
+        # chunk-scan residuals (probs, partial sums) get stacked and saved
+        attn_fn = jax.checkpoint(
+            lambda q_, k_, v_: chunked_causal_attention(
+                q_, k_, v_, q_offset=q_offset, causal=causal),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        out = attn_fn(q, k_exp, v_exp)
+
+    mask = local_head_mask(mi, padded_heads, cfg.num_heads)
+    out = out * mask[None, None, :, None].astype(out.dtype)
+    out = out.reshape(B, S, h_local * hd)
+    y = out @ wo
+    t = _lora_term(out, lora, "wo", lora_alpha)
+    if t is not None:
+        y = y + t.astype(y.dtype)
+    return psum_tp_act(y, mi), new_cache
+
+
+def apply_rope_heads(x, positions, theta):
+    from repro.models.layers import apply_rope
+    return apply_rope(x, positions, theta)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a sequence-sharded KV cache (long_500k).
+# Flash-decoding adapted to the mesh: each 'data' shard holds S/data of the
+# KV cache; partial (max, sumexp, weighted-V) stats are combined with
+# collectives instead of a second kernel pass.
+# ---------------------------------------------------------------------------
+
+def seq_sharded_decode_attention(q, k_shard, v_shard, valid_len_local,
+                                 mi: MeshInfo, seq_axis: str = "data"):
+    """q: [B, 1, H, hd]; k_shard/v_shard: [B, S_local, KVH, hd] (this
+    rank's slice of the cache); valid_len_local: [] number of valid
+    positions in the local shard. Returns [B, 1, H, hd]."""
+    B, _, H, hd = q.shape
+    S_local = k_shard.shape[1]
+    n_kv = k_shard.shape[2]
+    n_rep = H // n_kv
+    k_exp = _expand_kv(k_shard, n_rep).astype(jnp.float32)
+    v_exp = _expand_kv(v_shard, n_rep).astype(jnp.float32)
+    qf = q[:, 0].astype(jnp.float32)                       # [B,H,hd]
+    s = jnp.einsum("bhd,bkhd->bhk", qf, k_exp) / math.sqrt(hd)
+    pos = jnp.arange(S_local)
+    s = jnp.where(pos[None, None, :] < valid_len_local, s, NEG_INF)
+    m_local = jax.lax.stop_gradient(jnp.max(s, axis=-1))    # [B,H]
+    m = jax.lax.pmax(m_local, seq_axis)
+    p = jnp.exp(s - m[..., None])
+    l_local = jnp.sum(p, axis=-1)
+    acc_local = jnp.einsum("bhk,bkhd->bhd", p, v_exp)
+    l = jax.lax.psum(l_local, seq_axis)
+    acc = jax.lax.psum(acc_local, seq_axis)
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out[:, None].astype(q.dtype)                     # [B,1,H,hd]

@@ -1,0 +1,158 @@
+"""Core layers: norms, rotary embeddings, GLU MLPs, TP embeddings,
+TP-sharded cross-entropy. All functions run inside shard_map on local
+shards; collectives are explicit."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (MeshInfo, psum_tp, psum_tp_act,
+                                 pmax_tp, tp_rank)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5, offset: float = 0.0):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (scale.astype(jnp.float32) + offset)).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"swiglu": jax.nn.silu, "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+            "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def glu_mlp(x, w_in, w_gate, w_out, act: str, mi: MeshInfo):
+    """Column-parallel in/gate, row-parallel out (+psum over model)."""
+    h = act_fn(act)(x @ w_gate) * (x @ w_in)
+    y = h @ w_out
+    return psum_tp_act(y, mi)
+
+
+def dense_mlp(x, w_in, w_out, act: str, mi: MeshInfo):
+    h = act_fn(act)(x @ w_in)
+    return psum_tp_act(h @ w_out, mi)
+
+
+# ---------------------------------------------------------------------------
+# TP embedding + logits
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table, ids, mi: MeshInfo, scale: float = 1.0):
+    """table: [V_local, D] (vocab TP-sharded); ids: [B, S] global ids."""
+    v_local = table.shape[0]
+    offset = tp_rank(mi) * v_local
+    local_ids = ids - offset
+    valid = (local_ids >= 0) & (local_ids < v_local)
+    x = jnp.take(table, jnp.clip(local_ids, 0, v_local - 1), axis=0)
+    x = jnp.where(valid[..., None], x, 0).astype(table.dtype)
+    x = psum_tp(x, mi)
+    if scale != 1.0:
+        x = (x.astype(jnp.float32) * scale).astype(table.dtype)
+    return x
+
+
+def tp_softmax_xent(logits_local, labels, mi: MeshInfo, vocab_size: int,
+                    mask=None):
+    """Cross entropy over a vocab-TP-sharded logits tensor.
+
+    logits_local: [..., V_local]; labels: [...] global ids.
+    Returns (sum_loss, sum_count) over unmasked positions (no mean).
+    """
+    v_local = logits_local.shape[-1]
+    offset = tp_rank(mi) * v_local
+    lf = logits_local.astype(jnp.float32)
+    # numerically-stable logsumexp across shards (max is stability-only;
+    # its gradient contribution cancels, so stop_gradient is exact)
+    local_max = jax.lax.stop_gradient(jnp.max(lf, axis=-1))
+    gmax = pmax_tp(local_max, mi)
+    sumexp = jnp.sum(jnp.exp(lf - gmax[..., None]), axis=-1)
+    sumexp = psum_tp(sumexp, mi)
+    lse = gmax + jnp.log(sumexp)
+    # the label logit lives on exactly one shard
+    local_label = labels - offset
+    valid = (local_label >= 0) & (local_label < v_local)
+    picked = jnp.take_along_axis(
+        lf, jnp.clip(local_label, 0, v_local - 1)[..., None], axis=-1)[..., 0]
+    picked = psum_tp(jnp.where(valid, picked, 0.0), mi)
+    nll = lse - picked
+    if mask is None:
+        mask = labels < vocab_size
+    else:
+        mask = mask & (labels < vocab_size)
+    nll = jnp.where(mask, nll, 0.0)
+    return jnp.sum(nll), jnp.sum(mask.astype(jnp.float32))
+
+
+def chunked_tp_softmax_xent(x, head_w, labels, mi: MeshInfo, vocab_size: int,
+                            chunk: int, mask=None):
+    """Beyond-paper memory optimization: compute logits + CE in sequence
+    chunks under remat so the full [B,S,V_local] tensor never materializes."""
+    B, S, D = x.shape
+    if chunk <= 0 or S % chunk != 0 or S == chunk:
+        logits = x @ head_w
+        return tp_softmax_xent(logits, labels, mi, vocab_size, mask)
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, D).swapaxes(0, 1)          # [n,B,c,D]
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)        # [n,B,c]
+    ms = None if mask is None else mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        if ms is None:
+            xc, lc = inp
+            mc = None
+        else:
+            xc, lc, mc = inp
+        def f(xc, lc):
+            logits = xc @ head_w
+            return tp_softmax_xent(logits, lc, mi, vocab_size, mc)
+        s, c = jax.checkpoint(f)(xc, lc)
+        return (carry[0] + s, carry[1] + c), None
+
+    inps = (xs, ls) if ms is None else (xs, ls, ms)
+    from repro.models.common import pvary_like
+    z = pvary_like(jnp.float32(0), x)
+    (tot, cnt), _ = jax.lax.scan(body, (z, z), inps)
+    return tot, cnt

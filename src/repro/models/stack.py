@@ -1,0 +1,221 @@
+"""Generic layer-stack machinery: build stacked ParamDefs for a repeating
+group of heterogeneous sublayers, and apply them under scan with the
+FCDP gather + remat schedule.
+
+A "plan" is a list of positions; each position is a tuple of sublayer
+kinds. The whole group repeats `n_groups` times (params stacked on a
+leading 'stack' dim, applied with jax.lax.scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SystemConfig
+from repro.core.fcdp import (GatherPlan, checkpoint_layer,
+                             gather_param, gather_tree)
+from repro.core.partition import ParamDef, tree_map_defs
+from repro.models import sublayers as sl
+from repro.models.common import MeshInfo
+
+KIND_DEFS = {
+    "attn": sl.attn_defs,
+    "xattn": sl.xattn_defs,
+    "mlp": sl.mlp_defs,
+    "moe": sl.moe_defs,
+    "mamba": sl.mamba_defs,
+    "rwkv_tm": sl.rwkv_tm_defs,
+    "rwkv_cm": sl.rwkv_cm_defs,
+}
+
+STATEFUL_KINDS = ("attn", "xattn", "mamba", "rwkv_tm", "rwkv_cm")
+
+
+def group_defs(cfg: ModelConfig, plan: List[Tuple[str, ...]], tp: int,
+               sys: Optional[SystemConfig] = None
+               ) -> Dict[str, Dict[str, Dict[str, ParamDef]]]:
+    """Unstacked defs for one group: {pos{i}: {kind: {param: def}}}."""
+    out: Dict[str, Any] = {}
+    for i, kinds in enumerate(plan):
+        pos: Dict[str, Any] = {}
+        for kind in kinds:
+            if kind == "moe":
+                pos[kind] = sl.moe_defs(
+                    cfg, tp, weight_resident=bool(
+                        sys and sys.moe_weight_resident))
+            else:
+                pos[kind] = KIND_DEFS[kind](cfg, tp)
+        out[f"pos{i}"] = pos
+    return out
+
+
+def stack_defs(defs, n_groups: int):
+    """Prepend the scan ('stack') dimension to every def."""
+    def add_stack(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(
+            d, shape=(n_groups,) + d.shape, dims=("stack",) + d.dims)
+    return tree_map_defs(add_stack, defs)
+
+
+def apply_sublayer(kind: str, cfg, sys, mi, p, x, ctx: Dict[str, Any],
+                   state=None):
+    """Dispatch one sublayer. Returns (x, new_state, aux)."""
+    if kind == "attn":
+        if ctx.get("decode"):
+            x, new_state = sl.attn_decode(
+                cfg, sys, mi, p, x, state,
+                seq_sharded=ctx.get("seq_sharded", False))
+            return x, new_state, 0.0
+        x, new_cache = sl.attn_apply(
+            cfg, sys, mi, p, x, ctx["positions"],
+            causal=ctx.get("causal", True),
+            kv_cache=(state["k"], state["v"], state["idx"])
+            if (state is not None and ctx.get("prefill")) else None)
+        if new_cache is not None:
+            k, v, idx = new_cache
+            return x, {"k": k, "v": v, "idx": idx}, 0.0
+        return x, state, 0.0
+    if kind == "xattn":
+        if ctx.get("prefill") and state is not None:
+            # project encoder output once; store for decode
+            k, v = sl.xattn_make_kv(cfg, mi, p, ctx["enc_out"])
+            state = {"k": k.astype(state["k"].dtype),
+                     "v": v.astype(state["v"].dtype)}
+            x, _ = sl.xattn_apply(cfg, sys, mi, p, x, (k, v))
+            return x, state, 0.0
+        if ctx.get("decode"):
+            x, _ = sl.xattn_apply(cfg, sys, mi, p, x,
+                                  (state["k"], state["v"]))
+            return x, state, 0.0
+        k, v = sl.xattn_make_kv(cfg, mi, p, ctx["enc_out"])
+        x, _ = sl.xattn_apply(cfg, sys, mi, p, x, (k, v))
+        return x, state, 0.0
+    if kind == "mlp":
+        return sl.mlp_apply(cfg, sys, mi, p, x), state, 0.0
+    if kind == "moe":
+        x, aux = sl.moe_apply(cfg, sys, mi, p, x,
+                              sharded=bool(ctx.get("moe_sharded")))
+        return x, state, aux
+    if kind == "mamba":
+        if ctx.get("decode"):
+            x, new_state = sl.mamba_decode(cfg, sys, mi, p, x, state)
+            return x, new_state, 0.0
+        if ctx.get("prefill") and state is not None:
+            x, new_state = sl.mamba_prefill(cfg, sys, mi, p, x)
+            return x, new_state, 0.0
+        return sl.mamba_apply(cfg, sys, mi, p, x), state, 0.0
+    if kind == "rwkv_tm":
+        if ctx.get("decode"):
+            x, new_state = sl.rwkv_tm_decode(cfg, sys, mi, p, x, state)
+            return x, new_state, 0.0
+        if ctx.get("prefill") and state is not None:
+            x, new_state = sl.rwkv_tm_prefill(cfg, sys, mi, p, x)
+            return x, new_state, 0.0
+        return sl.rwkv_tm_apply(cfg, sys, mi, p, x), state, 0.0
+    if kind == "rwkv_cm":
+        if ctx.get("decode"):
+            x, new_state = sl.rwkv_cm_decode(cfg, sys, mi, p, x, state)
+            return x, new_state, 0.0
+        if ctx.get("prefill") and state is not None:
+            x, new_state = sl.rwkv_cm_prefill(cfg, sys, mi, p, x)
+            return x, new_state, 0.0
+        return sl.rwkv_cm_apply(cfg, sys, mi, p, x), state, 0.0
+    raise ValueError(f"unknown sublayer kind {kind!r}")
+
+
+def init_group_state(cfg, plan, mi: MeshInfo, batch_local: int,
+                     max_len: int, n_groups: int,
+                     seq_sharded: bool = False, enc_len: int = 0):
+    """Decode state for one group, stacked over n_groups."""
+    out: Dict[str, Any] = {}
+    for i, kinds in enumerate(plan):
+        pos: Dict[str, Any] = {}
+        for kind in kinds:
+            if kind == "attn":
+                pos[kind] = sl.attn_init_state(cfg, mi, batch_local, max_len,
+                                               seq_sharded)
+            elif kind == "xattn":
+                pos[kind] = sl.xattn_init_state(cfg, mi, batch_local, enc_len)
+            elif kind == "mamba":
+                pos[kind] = sl.mamba_init_state(cfg, mi, batch_local)
+            elif kind == "rwkv_tm":
+                pos[kind] = sl.rwkv_tm_init_state(cfg, mi, batch_local)
+            elif kind == "rwkv_cm":
+                pos[kind] = sl.rwkv_cm_init_state(cfg, mi, batch_local)
+        if pos:
+            out[f"pos{i}"] = pos
+    # stack over groups
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), out)
+
+
+def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
+                plan: List[Tuple[str, ...]],
+                stacked_params, stacked_plans, x, ctx: Dict[str, Any],
+                stacked_state=None, placement: Optional[str] = None):
+    """Scan the group over the stack dimension with the FCDP schedule.
+
+    stacked_params: pytree with leading stack dim on every leaf.
+    stacked_plans: GatherPlan tree (body-level dims, see plan_tree(stacked=True)).
+    Returns (x, new_stacked_state, aux_sum).
+    """
+    has_state = stacked_state is not None
+
+    moe_sharded = (getattr(sys, "moe_serve_sharded", False)
+                   and ctx.get("decode"))
+    if moe_sharded:
+        ctx = dict(ctx, moe_sharded=True)
+
+    def group_body(x, params_slice, state_slice):
+        new_state: Dict[str, Any] = {}
+        aux = jnp.float32(0)
+        for i, kinds in enumerate(plan):
+            key = f"pos{i}"
+            pos_new = {}
+            for kind in kinds:
+                p_shard = params_slice[key][kind]
+                gplan = stacked_plans[key][kind]
+                if kind == "moe" and moe_sharded:
+                    # gather-free expert weights: pass raw shards + plans
+                    p = {k: (gather_param(v, gplan[k])
+                             if not k.startswith("we_") else v)
+                         for k, v in p_shard.items()}
+                    p["_we_plans"] = {k: gplan[k] for k in p_shard
+                                      if k.startswith("we_")}
+                else:
+                    p = gather_tree(p_shard, gplan)
+                st = (state_slice.get(key, {}).get(kind)
+                      if state_slice else None)
+                x, st_new, a = apply_sublayer(kind, cfg, sys, mi, p, x, ctx, st)
+                aux = aux + a
+                if st_new is not None and kind in STATEFUL_KINDS:
+                    pos_new[kind] = st_new
+            if pos_new:
+                new_state[key] = pos_new
+        return x, new_state, aux
+
+    wrapped = checkpoint_layer(
+        group_body, sys.mode, sys.activation_policy, sys.host_offload,
+        placement=placement)
+
+    if has_state:
+        def body(carry, inp):
+            x, = carry
+            params_slice, state_slice = inp
+            x, new_state, aux = wrapped(x, params_slice, state_slice)
+            return (x,), (new_state, aux)
+        (x,), (new_states, auxs) = jax.lax.scan(
+            body, (x,), (stacked_params, stacked_state))
+        return x, new_states, jnp.sum(auxs)
+    else:
+        def body(carry, params_slice):
+            x, aux = carry
+            x, _, a = wrapped(x, params_slice, None)
+            return (x, aux + a), None
+        from repro.models.common import pvary_like
+        aux0 = pvary_like(jnp.float32(0), x)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked_params)
+        return x, None, aux

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (adamw_update, init_opt_state, lr_at_step,
+                               clip_by_global_norm)

@@ -1,0 +1,61 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard
+training state.
+
+The flow on a pod loss (DCN partition, hardware failure):
+  1. the launcher detects missing hosts (heartbeat / init timeout),
+  2. `remesh()` builds the largest valid mesh from what's left
+     (2x16x16 -> 16x16: drop the 'pod' axis; fewer chips -> shrink 'data'),
+  3. a new StepBundle is built against the new mesh, and the last
+     checkpoint is restored under the new shardings (global batch is
+     preserved -- per-device batch grows, or grad-accumulation kicks in).
+
+Checkpoints store global arrays (see checkpoint/), so restore-under-a-
+different-mesh is just device_put with the new sharding tree.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+
+def surviving_mesh_shape(n_devices: int, tp: int = 16
+                         ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (pod, data, model) / (data, model) mesh covering
+    <= n_devices with the given TP degree."""
+    tp = min(tp, n_devices)
+    per_pod = 256
+    if n_devices >= 2 * per_pod:
+        pods = n_devices // per_pod
+        return (pods, per_pod // tp, tp), ("pod", "data", "model")
+    data = max(n_devices // tp, 1)
+    return (data, tp), ("data", "model")
+
+
+def remesh(n_devices: Optional[int] = None, tp: int = 16):
+    """Build the best mesh over currently-visible devices."""
+    avail = len(jax.devices()) if n_devices is None else n_devices
+    shape, axes = surviving_mesh_shape(avail, tp)
+    used = math.prod(shape)
+    return make_mesh(shape, axes)
+
+
+def reshard_state(ckpt, step: int, bundle, example_tree):
+    """Restore a checkpoint under a (possibly different) bundle's mesh.
+
+    bundle: the new StepBundle; example_tree: matching structure of the
+    saved state (train_params list, opt_state, ...).
+    """
+    from jax.sharding import NamedSharding
+    train_sh = [NamedSharding(bundle.mesh, bundle.leaf_specs[i])
+                for i in bundle.train_idx]
+    shardings = {
+        "params": train_sh,
+        "opt": {"m": train_sh, "v": train_sh, "master": train_sh,
+                "step": NamedSharding(
+                    bundle.mesh, jax.sharding.PartitionSpec())},
+    }
+    return ckpt.restore(step, example_tree, shardings=shardings)

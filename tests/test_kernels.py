@@ -1,0 +1,159 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py pure-jnp
+oracles, in Pallas interpret mode (kernel body executed on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 128, 1, 64), (2, 256, 4, 64),
+                                   (1, 192, 2, 128), (2, 64, 2, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, dtype, causal, rng):
+    B, S, H, hd = shape
+    q, k, v = (jnp.asarray(rng.normal(0, 1, shape), dtype) for _ in range(3))
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True,
+                              block_q=64, block_k=64)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shapes(rng):
+    """Different BlockSpec tilings must agree."""
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (1, 256, 2, 64)), jnp.float32)
+               for _ in range(3))
+    o1 = ops.flash_attention(q, k, v, interpret=True, block_q=64, block_k=64)
+    o2 = ops.flash_attention(q, k, v, interpret=True, block_q=128,
+                             block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 64, 1, 16), (2, 128, 2, 32),
+                                   (1, 128, 4, 64)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_wkv6_sweep(shape, chunk, rng):
+    B, S, H, hd = shape
+    r, k, v = (jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.exp(jnp.asarray(rng.normal(-0.5, 1.0, shape), jnp.float32))
+    u = jnp.asarray(rng.normal(0, 1, (H, hd)), jnp.float32)
+    out, sf = ops.wkv6(r, k, v, logw, u, chunk=chunk, interpret=True)
+    eo, es = ref.rwkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eo),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(es),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_wkv6_strong_decay_no_overflow(rng):
+    """The masked-log-ratio form must survive w -> 0 (|logw| large)."""
+    shape = (1, 64, 1, 16)
+    r, k, v = (jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+               for _ in range(3))
+    logw = jnp.full(shape, -20.0, jnp.float32)   # extremely fast decay
+    u = jnp.zeros((1, 16), jnp.float32)
+    out, sf = ops.wkv6(r, k, v, logw, u, chunk=32, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    eo, _ = ref.rwkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eo),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_wkv6_matches_model_chunked_path(rng):
+    """kernel vs the model's jnp chunked implementation."""
+    from repro.models.sublayers import _wkv_chunked
+    shape = (2, 128, 2, 16)
+    r, k, v = (jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.exp(jnp.asarray(rng.normal(-0.5, 1.0, shape), jnp.float32))
+    u = jnp.asarray(rng.normal(0, 1, (2, 16)), jnp.float32)
+    o_model, s_model = _wkv_chunked(r, k, v, logw, u, chunk=64)
+    o_kern, s_kern = ops.wkv6(r, k, v, logw, u, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_model, np.float32),
+                               np.asarray(o_kern, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 64, 32), (2, 256, 64), (1, 128, 48)])
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_ssm_scan_sweep(shape, chunk, rng):
+    B, S, C = shape
+    a = jnp.asarray(rng.uniform(0.2, 0.999, shape), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+    hs = ops.ssm_scan(a, b, chunk=chunk, channel_block=32, interpret=True)
+    eh, _ = ref.mamba_scan_ref(a[..., None], b[..., None])
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(eh[..., 0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression (beyond-paper)
+# ---------------------------------------------------------------------------
+
+def test_int8_quant_roundtrip_error_bounded(rng):
+    from repro.core.grad_compress import _quantize
+    x = jnp.asarray(rng.normal(0, 1, (1000,)), jnp.float32)
+    q, scale = _quantize(x)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:1000]
+    # symmetric int8: error bounded by scale/2 per block
+    err = np.abs(np.asarray(deq - x))
+    bound = np.repeat(np.asarray(scale).ravel(),
+                      256)[:1000] * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
+if HAVE_HYP:
+    @given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_int8_quant_property(b, n, tail):
+        """Quantize-dequantize never increases magnitude beyond one scale
+        step, for arbitrary shapes (hypothesis)."""
+        from repro.core.grad_compress import _quantize
+        rng = np.random.default_rng(b * 100 + n * 10 + tail)
+        x = jnp.asarray(rng.normal(0, 2.0, (b, n * 256 + tail)), jnp.float32)
+        q, scale = _quantize(x)
+        assert int(np.abs(np.asarray(q)).max()) <= 127
+        deq = (np.asarray(q, np.float32)
+               * np.asarray(scale)).reshape(-1)[: x.size]
+        rel = np.abs(deq - np.asarray(x).ravel())
+        blocks = np.asarray(scale).ravel()
+        assert rel.max() <= blocks.max() * 0.5 + 1e-6
+
+    @given(st.integers(2, 64), st.floats(0.05, 0.999))
+    @settings(max_examples=15, deadline=None)
+    def test_ssm_scan_property(seq, decay):
+        """h_t of a constant-decay scan equals the closed form
+        sum_i a^(t-i) b_i (hypothesis over seq length and decay)."""
+        a = jnp.full((1, seq, 4), decay, jnp.float32)
+        rng = np.random.default_rng(seq)
+        b = jnp.asarray(rng.normal(0, 1, (1, seq, 4)), jnp.float32)
+        hs, _ = ref.mamba_scan_ref(a[..., None], b[..., None])
+        t = seq - 1
+        closed = sum(decay ** (t - i) * np.asarray(b)[0, i] for i in range(seq))
+        np.testing.assert_allclose(np.asarray(hs)[0, -1, :, 0], closed,
+                                   rtol=1e-4, atol=1e-4)

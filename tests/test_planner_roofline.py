@@ -1,0 +1,122 @@
+"""FCDP-Cache planner + roofline-walker unit tests."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                ShapeCell, SystemConfig)
+from repro.core.stepfn import StepBundle
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=4, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+CELL = ShapeCell("t", "train", 64, 8)
+
+
+def test_memory_planner_tau_search(mesh3):
+    """The planner demotes device->host placements until the step fits
+    the budget; worst case is all-regather (== zero3), per the paper's
+    guarantee."""
+    from repro.core.cache import MemoryPlanner
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8),
+                    optimizer=OptimizerConfig(total_steps=4, warmup_steps=1))
+    # generous budget: the fastest (full device-cache) plan must win
+    planner = MemoryPlanner(hbm_budget=1 << 40)
+    plan = planner.plan(run, mesh3, fractions=(1.0, 0.0))
+    assert plan.fits and plan.device_fraction == 1.0
+    # impossible budget: the planner walks every fraction and reports
+    # the ZeRO-3-equivalent floor without fitting
+    planner2 = MemoryPlanner(hbm_budget=1)
+    plan2 = planner2.plan(run, mesh3, fractions=(1.0, 0.0))
+    assert not plan2.fits and plan2.device_fraction == 0.0
+    assert len(plan2.iterations) == 2
+    # device-cache fraction must not change peak by more than the cache
+    peaks = [it["peak_bytes"] for it in plan2.iterations]
+    assert peaks[0] >= peaks[1]  # demoting to host frees HBM (CPU: >=)
+
+
+def test_host_cache_accounting(mesh3, mesh2):
+    """Host-cache bytes: stage-1 shards on the multi-pod mesh (W/pod per
+    pod), full TP-local weights on the single-pod mesh (W/tp per chip)."""
+    from repro.core.cache import cache_bytes_per_chip
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+    b3 = StepBundle(run, mesh3)
+    b2 = StepBundle(run, mesh2)
+    h3 = cache_bytes_per_chip(b3)["host_cache_bytes_per_chip"]
+    h2 = cache_bytes_per_chip(b2)["host_cache_bytes_per_chip"]
+    assert h3 > 0 and h2 > 0
+    # single-pod caches the fully gathered weight -> strictly larger
+    assert h2 > h3
+
+
+def test_roofline_walker_counts_scan_trips(mesh3):
+    """The jaxpr walker must multiply scanned-layer costs by the trip
+    count -- doubling num_layers must ~double walked FLOPs."""
+    from repro.launch.roofline import flops_bytes_from_jaxpr
+    import dataclasses
+    flops = {}
+    for L in (2, 4):
+        cfg = dataclasses.replace(DENSE, num_layers=L)
+        run = RunConfig(model=cfg, shape=CELL,
+                        system=SystemConfig(mode="fcdp", min_shard_size=8))
+        b = StepBundle(run, mesh3)
+        step = b.make_train_step()
+        closed = step.trace(*b.train_input_sds()).jaxpr
+        f, _ = flops_bytes_from_jaxpr(closed, 8)
+        flops[L] = f
+    # layer-proportional part dominates the embedding/head at this width?
+    # it does not at vocab 256 x d 64, so check the layer DELTA instead:
+    delta = flops[4] - flops[2]
+    assert delta > 0
+    # adding 2 more layers again would add the same amount: verify by
+    # linear extrapolation against a 6-layer model
+    cfg6 = dataclasses.replace(DENSE, num_layers=6)
+    run6 = RunConfig(model=cfg6, shape=CELL,
+                     system=SystemConfig(mode="fcdp", min_shard_size=8))
+    b6 = StepBundle(run6, mesh3)
+    closed6 = b6.make_train_step().trace(*b6.train_input_sds()).jaxpr
+    f6, _ = flops_bytes_from_jaxpr(closed6, 8)
+    np.testing.assert_allclose(f6, flops[4] + delta, rtol=0.02)
+
+
+def test_collective_walker_axis_attribution(mesh3):
+    """pod-axis collectives -> dcn bytes; data/model -> ici."""
+    from repro.launch.roofline import collect_collectives
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+    b = StepBundle(run, mesh3)
+    step = b.make_train_step()
+    closed = step.trace(*b.train_input_sds()).jaxpr
+    stats = collect_collectives(closed, {"pod": 2, "data": 2, "model": 2})
+    assert stats.dcn_bytes > 0 and stats.ici_bytes > 0
+    assert stats.by_axis["pod"] == pytest.approx(stats.dcn_bytes)
+    assert (stats.by_axis["data"] + stats.by_axis["model"]
+            == pytest.approx(stats.ici_bytes))
+    # fcdp invariant: backward pod AG eliminated -> pod AG bytes must be
+    # exactly the forward gather volume (one (n-1)/n * shard sweep + CE)
+    assert stats.by_op_axis["all_gather/pod"] < stats.by_op_axis[
+        "all_gather/data"]
+
+
+def test_opt_state_dtype_halves_state(mesh3):
+    """bf16 optimizer states (the kimi-k2 HBM mitigation recorded in
+    EXPERIMENTS.md) produce bf16 m/v leaves and still train."""
+    from repro.optim.adamw import init_opt_state
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8,
+                                        opt_state_dtype="bfloat16"),
+                    optimizer=OptimizerConfig(total_steps=4, warmup_steps=1))
+    b = StepBundle(run, mesh3)
+    params = b.init_all_params(seed=0)
+    tp, fp = b.split(params)
+    opt = jax.jit(functools.partial(init_opt_state, sys=run.system))(tp)
+    assert all(m.dtype == jnp.bfloat16 for m in opt["m"])
+    batch = {"ids": jnp.ones((8, 64), jnp.int32),
+             "labels": jnp.ones((8, 64), jnp.int32) * 2,
+             "mask": jnp.ones((8, 64), bool)}
+    tp, opt, m = b.make_train_step()(tp, fp, opt, batch)
+    assert np.isfinite(float(m["loss"]))
