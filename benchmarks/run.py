@@ -1,8 +1,12 @@
 import os
+import sys
 # The comm/memory/throughput benches analyse the production meshes, which
 # requires the 512-device host platform BEFORE jax initializes. This is
 # deliberate and local to this entrypoint (smoke tests see 1 device).
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# --smoke uses an 8-device toy mesh instead so CI finishes in minutes.
+_N_DEV = 8 if "--smoke" in sys.argv else 512
+os.environ.setdefault("XLA_FLAGS",
+                      f"--xla_force_host_platform_device_count={_N_DEV}")
 
 """Benchmark harness -- one benchmark per paper table/figure.
 
@@ -16,7 +20,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 Prints ``name,us_per_call,derived`` CSV per the repo convention; heavy
 numbers also land in results/bench_*.json.
+
+``--smoke`` runs a reduced matrix (one arch, one mesh, the kernel
+oracles and one comm-volume dry-run cell, including the prefetch
+overlap row) so CI can keep the bench schema honest in minutes.
 """
+import argparse
 import json
 import time
 import traceback
@@ -26,11 +35,70 @@ RESULTS = Path(__file__).resolve().parent.parent / "results"
 
 import numpy as np
 
+def bench_comm_smoke(rows):
+    """--smoke fast path: a toy (2,2,2) mesh per system mode, walking the
+    same collect_collectives/roofline_report pipeline the full comm bench
+    uses -- keeps the BENCH_*.json schema honest without the 512-device
+    compile. Also exercises the prefetch overlap row."""
+    import jax
+    from repro.configs.base import (ModelConfig, RunConfig, ShapeCell,
+                                    SystemConfig)
+    from repro.core.engine import StepBundle
+    from repro.core.strategy import strategy_names
+    from repro.launch.mesh import make_mesh
+    from repro.launch.roofline import (collect_collectives,
+                                       flops_bytes_from_jaxpr,
+                                       roofline_report)
+    cfg = ModelConfig(name="smoke-dense", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256)
+    cell = ShapeCell("t", "train", 64, 8)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    out = []
+    for mode in strategy_names():
+        for prefetch in (False, True):
+            sysc = SystemConfig(mode=mode, min_shard_size=8,
+                                prefetch=prefetch)
+            b = StepBundle(RunConfig(model=cfg, shape=cell, system=sysc),
+                           mesh)
+            closed = b.make_train_step().trace(*b.train_input_sds()).jaxpr
+            sizes = {a: b.mi.size(a) for a in b.mi.axis_names}
+            stats = collect_collectives(closed, sizes)
+            flops, nbytes = flops_bytes_from_jaxpr(closed, 8)
+            live = b.strategy.prefetch_active(sysc, mesh)
+            rep = roofline_report(flops, nbytes, stats, cfg, cell, 8,
+                                  prefetch=live)
+            # schema the full benches / EXPERIMENTS tables consume
+            for key in ("compute_s", "memory_s", "collective_s", "ici_s",
+                        "dcn_s", "dominant", "prefetch", "coll_by_op",
+                        "dcn_bytes_per_chip", "ici_bytes_per_chip"):
+                assert key in rep, f"roofline schema missing {key}"
+            out.append({"system": mode, "prefetch": prefetch,
+                        "prefetch_live": live,
+                        "dcn_bytes": rep["dcn_bytes_per_chip"],
+                        "overlapped_dcn_bytes":
+                            rep["prefetch"]["overlapped_dcn_bytes_per_chip"],
+                        "collective_exposed_s":
+                            rep["prefetch"]["collective_exposed_s"]})
+            rows.append((f"smoke/{mode}{'_pf' if prefetch else ''}_dcn_MB",
+                         0, rep["dcn_bytes_per_chip"] / 1e6))
+    # invariants the acceptance gates rely on
+    by = {(o["system"], o["prefetch"]): o for o in out}
+    assert by[("fcdp", True)]["overlapped_dcn_bytes"] > 0
+    assert by[("zero3", True)]["overlapped_dcn_bytes"] > 0
+    assert by[("mics", True)]["overlapped_dcn_bytes"] == 0
+    assert not by[("mics", True)]["prefetch_live"]
+    return {"smoke": True, "rows": out}
+
 
 def _cell(arch, cell, mode, multi_pod=True, overrides=None):
     from repro.launch.dryrun import dryrun_cell
+    # paper-table benches compare modes on the sequential schedule:
+    # prefetch would e.g. remove zero3's backward stage-1 DCN re-gather
+    # and shrink the baseline every table normalizes against
     return dryrun_cell(arch, cell, multi_pod, mode,
-                       system_overrides=overrides, verbose=False)
+                       system_overrides=overrides, verbose=False,
+                       prefetch=False)
 
 
 def bench_comm_volume(rows):
@@ -280,10 +348,19 @@ BENCHES = [
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI path: kernel oracles + toy-mesh comm "
+                         "schema check only")
+    args = ap.parse_args()
+    benches = ([("comm_smoke", bench_comm_smoke),
+                ("kernels", bench_kernels)]
+               if args.smoke else BENCHES)
     RESULTS.mkdir(exist_ok=True)
     rows = []
     all_out = {}
-    for name, fn in BENCHES:
+    failures = 0
+    for name, fn in benches:
         t0 = time.time()
         try:
             all_out[name] = fn(rows)
@@ -292,12 +369,16 @@ def main() -> None:
             traceback.print_exc()
             all_out[name] = {"error": str(e)}
             status = "FAILED"
+            failures += 1
         print(f"# bench {name}: {status} ({time.time()-t0:.0f}s)")
-    with open(RESULTS / "bench_results.json", "w") as f:
+    out_name = "bench_smoke.json" if args.smoke else "bench_results.json"
+    with open(RESULTS / out_name, "w") as f:
         json.dump(all_out, f, indent=2, default=float)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.6g}")
+    if args.smoke and failures:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,150 @@
+"""JAX version compatibility layer.
+
+The repo targets the current JAX API surface (``jax.shard_map`` with
+``check_vma``, varying-mesh-axis typing, ``all_gather_invariant``); this
+module makes it run unchanged on JAX 0.4.x (0.4.37 is the pinned CI
+toolchain). Every versioned import in ``src/`` routes through here:
+
+  shard_map            jax.shard_map | jax.experimental.shard_map, and the
+                       check_vma -> check_rep kwarg rename
+  all_gather_invariant falls back to jax.lax.all_gather (the invariant
+                       gather exists only on VMA-typed JAX; the varying
+                       gather is numerically identical, it just loses the
+                       replication-typing guarantee)
+  pvary / typeof       no-ops on pre-VMA JAX (avals carry no vma there,
+                       so there is nothing to lift)
+  flatten_with_path    jax.tree.flatten_with_path | jax.tree_util
+  make_mesh            drops the axis_types kwarg where unsupported
+
+Feature flags (HAS_VMA, HAS_INVARIANT_GATHER) let callers branch when the
+semantic difference matters (it never changes numerics, only typing
+strictness and comm-accounting op names).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+
+# ---------------------------------------------------------------------------
+# shard_map: location + check_vma/check_rep rename
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # JAX <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
+HAS_VMA = "check_vma" in _SHARD_MAP_PARAMS
+
+if not HAS_VMA:
+    # check_rep=True is load-bearing on pre-VMA shard_map: its rewrite
+    # pass is what inserts the pbroadcast/psum pairs that make gradients
+    # of replicated-in-storage params (MiCS pod-replication, small
+    # replicated tensors) correct. The stock 0.4.x registry just lacks a
+    # rule for the `name` primitive our remat-policy cache boundaries
+    # rely on (checkpoint_name) -- name is a unary pass-through, so the
+    # standard rep-preserving rule is exact. setdefault semantics: a
+    # future jax that ships its own rule wins.
+    try:
+        from jax.experimental import shard_map as _shmap_mod
+        from jax._src.ad_checkpoint import name_p as _name_p
+        _shmap_mod.register_standard_check(_name_p)
+        _shmap_mod.register_standard_rewrite(_name_p)
+    except Exception:  # pragma: no cover - registry moved/renamed
+        pass
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+              check_vma: bool = True, **kw):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename
+    papered over. Call with the new-style kwarg; on old JAX the value is
+    forwarded as ``check_rep`` (with the `name` rule patched in above)."""
+    if HAS_VMA:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma, **kw)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Invariant all-gather
+# ---------------------------------------------------------------------------
+
+try:
+    from jax._src.lax.parallel import all_gather_invariant as _agi
+    HAS_INVARIANT_GATHER = True
+except ImportError:  # pre-VMA JAX: the varying gather is the only gather
+    _agi = None
+    HAS_INVARIANT_GATHER = False
+
+
+def all_gather_invariant(x, axis_name, *, axis: int = 0, tiled: bool = False):
+    """Invariant (replicated-typed) all-gather, or the plain all-gather on
+    JAX versions without it. One axis name per call (matching the real
+    invariant gather's signature)."""
+    if _agi is not None:
+        return _agi(x, axis_name, axis=axis, tiled=tiled)
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+# ---------------------------------------------------------------------------
+# VMA typing helpers
+# ---------------------------------------------------------------------------
+
+def typeof(x):
+    """jax.typeof, falling back to the abstract value on older JAX (whose
+    avals carry no ``vma`` attribute -- callers getattr with a default)."""
+    if hasattr(jax, "typeof"):
+        return jax.typeof(x)
+    return jax.core.get_aval(x)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis from inside shard_map.
+    jax.lax.axis_size where it exists; the axis-env frame on older JAX
+    (which returns either a frame object or the size itself)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return getattr(frame, "size", frame)
+
+
+def pvary(x, axis_names: Tuple[str, ...]):
+    """Lift a value to vary over ``axis_names``. On pre-VMA JAX values
+    carry no varying type, so this is the identity."""
+    if not axis_names:
+        return x
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Pytree path flattening
+# ---------------------------------------------------------------------------
+
+def flatten_with_path(tree, is_leaf: Optional[Callable] = None):
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+_MAKE_MESH_PARAMS = set(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """jax.make_mesh with Auto axis types where the kwarg exists; older
+    JAX has no axis-type concept (everything is Auto)."""
+    shape, axes = tuple(shape), tuple(axes)
+    if "axis_types" in _MAKE_MESH_PARAMS and hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -119,6 +119,14 @@ class SystemConfig:
     # FCDP-Cache: fraction of layers allowed to keep the cached shard on
     # device (planner output; tau in the paper). 0.0 -> all host, 1.0 -> all device.
     device_cache_fraction: float = 0.0
+    # layer-ahead prefetch: issue layer i+1's stage-1 (inter/DCN)
+    # all-gather concurrently with layer i's compute (strategy-gated:
+    # a no-op for MiCS / frozen / single-pod paths where stage 1 is
+    # empty). Trades one in-flight stage-1 buffer -- carried across the
+    # layer scan, so the backward reads it instead of re-gathering --
+    # for full DCN overlap. Off by default: the sequential schedule is
+    # the paper-faithful baseline the mode comparisons are defined on.
+    prefetch: bool = False
     host_offload: bool = True          # False -> Saveable instead of Offloadable
     # FCDP-Comm / PEFT
     peft: bool = False

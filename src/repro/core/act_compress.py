@@ -20,19 +20,15 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import all_gather_invariant, axis_size, pvary
 from repro.core.grad_compress import BLOCK
-
-try:
-    from jax._src.lax.parallel import all_gather_invariant
-except Exception:  # pragma: no cover
-    all_gather_invariant = None
 
 
 def _int8_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Quantized ring all-reduce: int8 RS (via all_to_all + local sum)
     followed by int8 invariant AG. Returns the (approximately) summed
     tensor, invarying over `axis_name`."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
     total = flat.shape[0]
@@ -75,7 +71,7 @@ def _fwd(x, axis_name):
 
 
 def _bwd(axis_name, _, g):
-    return (jax.lax.pvary(g, (axis_name,)),)
+    return (pvary(g, (axis_name,)),)
 
 
 int8_psum.defvjp(_fwd, _bwd)
@@ -89,7 +85,7 @@ def int8_bwd_psum(x, axis_name: str):
     transpose inserts a full all-reduce on its cotangent (the Megatron
     g-bar). Wrapping the input here compresses that implicit reduction
     the same way int8_psum compresses the forward one."""
-    return jax.lax.pvary(x, (axis_name,))
+    return pvary(x, (axis_name,))
 
 
 def _bp_fwd(x, axis_name):

@@ -4,8 +4,10 @@ XLA has no runtime allocator to poll, so the paper's "monitor GPU memory
 pressure, cache on-device when below tau" becomes a compile-time search:
 start from the fastest placement (device cache for every layer group),
 compile, read memory_analysis(), and demote groups device -> host ->
-regather until the step fits tau * HBM. Worst case (all regather) is
-exactly ZeRO-3 -- the paper's safety guarantee as a static property.
+regather until the step fits tau * HBM. If even device_fraction=0.0 does
+not fit, the planner tries full activation remat (block_io) before
+declaring regather-only; worst case is exactly ZeRO-3 -- the paper's
+safety guarantee as a static property.
 
 Also provides the host-DRAM budget accounting (the paper's "~2W bytes of
 host memory per node"): on the CPU backend pinned_host placements are
@@ -14,14 +16,12 @@ separate would-be-host bytes from true device temps.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import jax
 
-from repro.core.fcdp import GatherPlan
-from repro.core.partition import is_def
+from repro.core.strategy import GatherPlan
 
 HBM_PER_CHIP = 16 * 2**30          # v5e
 
@@ -34,37 +34,18 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
     worth = W/(pod-degree) per pod total, the paper's 'W per node'.
     cache_after=2 (single-pod): the fully gathered TP-local weight.
     """
-    from repro.core.fcdp import plan_tree
     mi = bundle.mi
-    sysc = bundle.run.system
+    strategy = bundle.strategy
     plans = jax.tree.leaves(
         bundle.model.plans,
         is_leaf=lambda x: isinstance(x, GatherPlan))
     defs = bundle.def_leaves
     host = 0.0
     for d, p in zip(defs, plans):
-        if not isinstance(p, GatherPlan) or not p.is_gathered:
+        if not isinstance(p, GatherPlan):
             continue
-        nbytes = d.size() * jax.dtypes.canonicalize_dtype(d.dtype).itemsize
-        if p.cache_after == 1:
-            # stage-1 result = the chip's shard gathered over inter axes
-            shard = nbytes / _spec_degree(d, mi)
-            inter_deg = math.prod(mi.size(a) for a in p.inter_axes) or 1
-            host += shard * inter_deg
-        else:
-            # fully gathered TP-local tensor (single-pod layout)
-            host += nbytes / (mi.tp if d.tp_dim is not None else 1)
+        host += strategy.cached_bytes_for(d, p, mi)
     return {"host_cache_bytes_per_chip": host}
-
-
-def _spec_degree(d, mi) -> int:
-    deg = 1
-    if d.fsdp_dim is not None:
-        for a in mi.fsdp_axes:
-            deg *= mi.size(a)
-    if d.tp_dim is not None:
-        deg *= mi.tp
-    return deg
 
 
 @dataclass
@@ -76,6 +57,9 @@ class CachePlan:
     peak_bytes: int
     host_bytes: float
     iterations: List[Dict]
+    # activation policy the winning configuration ran with -- differs
+    # from the run's own policy only when the block_io fallback fired
+    activation_policy: str = "save_all"
 
 
 class MemoryPlanner:
@@ -93,19 +77,42 @@ class MemoryPlanner:
         return (m.argument_size_in_bytes + m.temp_size_in_bytes
                 + m.output_size_in_bytes - m.alias_size_in_bytes)
 
+    def _attempt(self, run, mesh, sysc, iters) -> Dict:
+        from repro.core.engine import StepBundle
+        bundle = StepBundle(run.replace(system=sysc), mesh)
+        peak = self._peak(bundle)
+        host = cache_bytes_per_chip(bundle)["host_cache_bytes_per_chip"]
+        it = {"device_fraction": sysc.device_cache_fraction,
+              "activation_policy": sysc.activation_policy,
+              "peak_bytes": peak, "host_bytes": host}
+        iters.append(it)
+        return it
+
+    def _fits(self, it: Dict) -> bool:
+        return (it["peak_bytes"] <= self.hbm
+                and (self.host is None or it["host_bytes"] <= self.host))
+
     def plan(self, run, mesh, fractions=(1.0, 0.5, 0.25, 0.0)) -> CachePlan:
         """Try device-cache fractions high->low; after 0.0, fall back to
         activation remat (block_io), then declare regather-only."""
-        from repro.core.stepfn import StepBundle
-        iters = []
+        iters: List[Dict] = []
         for frac in fractions:
             sysc = run.system.replace(device_cache_fraction=frac)
-            bundle = StepBundle(run.replace(system=sysc), mesh)
-            peak = self._peak(bundle)
-            host = cache_bytes_per_chip(bundle)["host_cache_bytes_per_chip"]
-            iters.append({"device_fraction": frac, "peak_bytes": peak,
-                          "host_bytes": host})
-            if peak <= self.hbm and (self.host is None or host <= self.host):
-                return CachePlan(frac, True, peak, host, iters)
-        return CachePlan(0.0, False, iters[-1]["peak_bytes"],
-                         iters[-1]["host_bytes"], iters)
+            it = self._attempt(run, mesh, sysc, iters)
+            if self._fits(it):
+                return CachePlan(frac, True, it["peak_bytes"],
+                                 it["host_bytes"], iters,
+                                 activation_policy=sysc.activation_policy)
+        # device cache fully demoted and still over budget: trade compute
+        # for memory with full activation remat before giving up
+        if run.system.activation_policy != "block_io":
+            sysc = run.system.replace(device_cache_fraction=0.0,
+                                      activation_policy="block_io")
+            it = self._attempt(run, mesh, sysc, iters)
+            if self._fits(it):
+                return CachePlan(0.0, True, it["peak_bytes"],
+                                 it["host_bytes"], iters,
+                                 activation_policy="block_io")
+        last = iters[-1]
+        return CachePlan(0.0, False, last["peak_bytes"], last["host_bytes"],
+                         iters, activation_policy=last["activation_policy"])

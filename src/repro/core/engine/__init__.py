@@ -1,0 +1,5 @@
+"""Step-function engine: StepBundle (per-cell state) plus the train and
+serve step builders, all consuming a resolved ShardingStrategy."""
+from repro.core.engine.bundle import StepBundle
+
+__all__ = ["StepBundle"]

@@ -1,0 +1,234 @@
+"""StepBundle: everything needed to lower/run one (arch x shape x system)
+cell -- model + ParamDefs, the resolved ShardingStrategy, leaf specs, and
+ShapeDtypeStruct builders for the dry-run. The actual step-function
+bodies live in engine/train.py and engine/serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig, ShapeCell
+from repro.core import peft as peft_mod
+from repro.core.partition import is_def, init_params, label_tree
+from repro.core.strategy import get_strategy, spec_axes
+from repro.models.common import MeshInfo
+from repro.models.registry import build_model
+
+
+class StepBundle:
+    """Everything needed to lower/run one (arch x shape x system) cell.
+
+    Resolves ``SystemConfig.mode`` to a ShardingStrategy exactly once;
+    every spec/plan derivation below consumes the strategy object.
+    """
+
+    def __init__(self, run: RunConfig, mesh):
+        self.run = run
+        self.mesh = mesh
+        self.mi = MeshInfo.from_mesh(mesh)
+        cfg, sys = run.model, run.system
+        self.strategy = get_strategy(sys.mode)
+        self.model = build_model(cfg, sys, mesh)
+        defs = self.model.defs
+        if sys.peft:
+            defs = peft_mod.apply_lora(defs, cfg, sys)
+        elif run.shape.kind != "train" and sys.serve_frozen:
+            # serving: all weights frozen -> FCDP-Comm cached layout
+            defs = peft_mod.freeze_all(defs)
+        if defs is not self.model.defs:
+            self.model._defs = defs
+            self.model._plans = self.strategy.plan_tree(
+                defs, mesh, sys.min_shard_size,
+                compress_bwd=(sys.grad_compress == "int8_pod"))
+        self.model._defs = label_tree(self.model.defs)
+        self.defs = self.model.defs
+        self.def_leaves, self.treedef = jax.tree.flatten(
+            self.defs, is_leaf=is_def)
+        self.train_idx = [i for i, d in enumerate(self.def_leaves)
+                          if not d.frozen]
+        self.frozen_idx = [i for i, d in enumerate(self.def_leaves)
+                           if d.frozen]
+        self.leaf_specs = [
+            self.strategy.storage_spec(d, mesh, sys.min_shard_size)
+            for d in self.def_leaves]
+        # ZeRO-2-for-experts: 'inter_only' (weight-resident) tensors keep
+        # their PARAMS pod-sharded but their OPTIMIZER state fully sharded;
+        # gradients are reduce-scattered over the intra axes before the
+        # update and the updated shard is gathered back once per step.
+        self.full_specs = [
+            self.strategy.storage_spec(
+                dataclasses.replace(d, fsdp_scope="full"), mesh,
+                sys.min_shard_size)
+            for d in self.def_leaves]
+        self.rep_factors = [self._replication(s) for s in self.full_specs]
+
+    def _replication(self, spec: P) -> float:
+        used = spec_axes(spec)
+        rep = 1
+        for a in self.mi.axis_names:
+            if a not in used:
+                rep *= self.mi.size(a)
+        return float(rep)
+
+    # -- param materialization ------------------------------------------------
+    def init_all_params(self, seed: int = 0) -> List[jax.Array]:
+        sys = self.run.system
+        vals = init_params(self.defs, seed, self.mesh, self.strategy,
+                           sys.min_shard_size)
+        return jax.tree.leaves(vals)
+
+    def split(self, leaves: List[Any]) -> Tuple[List[Any], List[Any]]:
+        return ([leaves[i] for i in self.train_idx],
+                [leaves[i] for i in self.frozen_idx])
+
+    def merge(self, train: List[Any], frozen: List[Any]):
+        leaves: List[Any] = [None] * len(self.def_leaves)
+        for i, v in zip(self.train_idx, train):
+            leaves[i] = v
+        for i, v in zip(self.frozen_idx, frozen):
+            leaves[i] = v
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def _leaf_sds(self, idxs) -> List[jax.ShapeDtypeStruct]:
+        out = []
+        for i in idxs:
+            d = self.def_leaves[i]
+            out.append(jax.ShapeDtypeStruct(
+                d.shape, d.dtype,
+                sharding=NamedSharding(self.mesh, self.leaf_specs[i])))
+        return out
+
+    # -- batch specs ------------------------------------------------------
+    def batch_spec(self, cell: ShapeCell) -> Dict[str, P]:
+        dp = self.mi.dp
+        bspec = P(self.mi.fsdp_axes) if cell.global_batch % dp == 0 else P()
+        cfg = self.run.model
+        out = {"ids": bspec, "labels": bspec, "mask": bspec}
+        if cfg.num_encoder_layers > 0:
+            out["enc_embeds"] = bspec
+        return out
+
+    def batch_sds(self, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.run.model
+        B, S = cell.global_batch, cell.seq_len
+        specs = self.batch_spec(cell)
+        out = {
+            "ids": jax.ShapeDtypeStruct(
+                (B, S), jnp.int32,
+                sharding=NamedSharding(self.mesh, specs["ids"])),
+            "labels": jax.ShapeDtypeStruct(
+                (B, S), jnp.int32,
+                sharding=NamedSharding(self.mesh, specs["labels"])),
+            "mask": jax.ShapeDtypeStruct(
+                (B, S), jnp.bool_,
+                sharding=NamedSharding(self.mesh, specs["mask"])),
+        }
+        if cfg.num_encoder_layers > 0:
+            # audio frontend stub: precomputed frame embeddings, 1/4 length
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, max(S // 4, 8), cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(self.mesh, specs["enc_embeds"]))
+        return out
+
+    # -- step builders (bodies in engine/train.py, engine/serve.py) ---------
+    def make_train_step(self):
+        from repro.core.engine.train import build_train_step
+        return build_train_step(self)
+
+    def make_prefill_step(self):
+        from repro.core.engine.serve import build_prefill_step
+        return build_prefill_step(self)
+
+    def make_decode_step(self, seq_sharded: bool = False):
+        from repro.core.engine.serve import build_decode_step
+        return build_decode_step(self, seq_sharded=seq_sharded)
+
+    # -- dry-run input ShapeDtypeStructs ------------------------------------
+    def train_input_sds(self):
+        """ShapeDtypeStructs for lowering the train step (no allocation)."""
+        sys = self.run.system
+        train_sds = self._leaf_sds(self.train_idx)
+        frozen_sds = self._leaf_sds(self.frozen_idx)
+        od, md = jnp.dtype(sys.opt_state_dtype), jnp.dtype(sys.master_dtype)
+        opt_sh = [NamedSharding(self.mesh, self.full_specs[i])
+                  for i in self.train_idx]
+        def with_dtype(dt):
+            return [jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+                    for s, sh in zip(train_sds, opt_sh)]
+        opt_sds = {"m": with_dtype(od),
+                   "v": with_dtype(od),
+                   "master": with_dtype(md),
+                   "step": jax.ShapeDtypeStruct(
+                       (), jnp.int32,
+                       sharding=NamedSharding(self.mesh, P()))}
+        return train_sds, frozen_sds, opt_sds, self.batch_sds(self.run.shape)
+
+    # -- serve state (derivations in engine/serve.py) ------------------------
+    def _serve_batch_dims(self, cell: ShapeCell,
+                          seq_sharded: bool = False) -> Tuple[int, P]:
+        from repro.core.engine.serve import serve_batch_dims
+        return serve_batch_dims(self, cell, seq_sharded)
+
+    def _state_specs(self, cell: ShapeCell, seq_sharded: bool):
+        from repro.core.engine.serve import state_specs
+        return state_specs(self, cell, seq_sharded)
+
+    def _abstract_state(self, cell: ShapeCell, seq_sharded: bool):
+        from repro.core.engine.serve import abstract_state
+        return abstract_state(self, cell, seq_sharded)
+
+    def init_state(self, cell: ShapeCell, seq_sharded: bool = False):
+        """Materialize a decode state placed per state_specs (smoke/serve)."""
+        cfg = self.run.model
+        kw = {}
+        if cfg.num_encoder_layers > 0:
+            kw["enc_len"] = max(cell.seq_len // 4, 8)
+        specs = self._state_specs(cell, seq_sharded)
+        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+        fn = jax.jit(lambda: self.model.init_decode_state(
+            cell.global_batch, cell.seq_len, seq_sharded=seq_sharded, **kw),
+            out_shardings=shardings)
+        return fn()
+
+    def state_sds(self, cell: ShapeCell, seq_sharded: bool):
+        """ShapeDtypeStruct state tree with shardings for dry-run."""
+        abstract = self._abstract_state(cell, seq_sharded)
+        specs = self._state_specs(cell, seq_sharded)
+
+        def glue(a, s):
+            return jax.ShapeDtypeStruct(
+                a.shape, a.dtype, sharding=NamedSharding(self.mesh, s))
+        return jax.tree.map(glue, abstract, specs)
+
+    def prefill_input_sds(self):
+        """Inputs for lowering the prefill step."""
+        cell = self.run.shape
+        cfg = self.run.model
+        params_sds = self._leaf_sds(range(len(self.def_leaves)))
+        _, bspec = self._serve_batch_dims(cell)
+        B, S = cell.global_batch, cell.seq_len
+        ids = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(self.mesh, bspec))
+        state = self.state_sds(cell, seq_sharded=False)
+        if cfg.num_encoder_layers > 0:
+            enc = jax.ShapeDtypeStruct(
+                (B, max(S // 4, 8), cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(self.mesh, bspec))
+            return params_sds, enc, ids, state
+        return params_sds, ids, state
+
+    def decode_input_sds(self, seq_sharded: bool = False):
+        """Inputs for lowering one decode step."""
+        cell = self.run.shape
+        params_sds = self._leaf_sds(range(len(self.def_leaves)))
+        _, bspec = self._serve_batch_dims(cell, seq_sharded)
+        tok = jax.ShapeDtypeStruct(
+            (cell.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(self.mesh, bspec))
+        state = self.state_sds(cell, seq_sharded=seq_sharded)
+        return params_sds, tok, state

@@ -1,0 +1,135 @@
+"""Serve-step builders (prefill / decode) and the decode-state
+PartitionSpec derivations they share with the dry-run."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import HAS_VMA, shard_map
+from repro.configs.base import ShapeCell
+
+# Serve steps are gradient-free pure forwards: replication checking is a
+# purely static verification there (the rep rewrite has no numerical
+# role without AD). The pre-VMA checker cannot prove the decode-state
+# outputs (e.g. rwkv token-shift xprev) are model-replicated even though
+# they are, so keep the check on VMA-typed JAX and drop it on the
+# legacy checker.
+_SERVE_CHECK = HAS_VMA
+
+
+def serve_batch_dims(bundle, cell: ShapeCell,
+                     seq_sharded: bool = False) -> Tuple[int, P]:
+    """Batch sharding for serving. When the sequence dimension owns
+    'data' (long-context), batch may only use the remaining fsdp axes."""
+    mi = bundle.mi
+    axes = tuple(a for a in mi.fsdp_axes
+                 if not (seq_sharded and a == mi.seq_axis))
+    deg = 1
+    for a in axes:
+        deg *= mi.size(a)
+    if axes and cell.global_batch % deg == 0:
+        return cell.global_batch // deg, P(axes)
+    return cell.global_batch, P()
+
+
+def build_prefill_step(bundle):
+    run, mesh = bundle.run, bundle.mesh
+    model = bundle.model
+    cell = run.shape
+    b_local, bspec = serve_batch_dims(bundle, cell)
+    cfg = run.model
+
+    if cfg.num_encoder_layers > 0:
+        def body(params_leaves, enc_embeds, ids, state):
+            params = jax.tree.unflatten(bundle.treedef, params_leaves)
+            return model.prefill_fn(params, enc_embeds, ids, state)
+    else:
+        def body(params_leaves, ids, state):
+            params = jax.tree.unflatten(bundle.treedef, params_leaves)
+            return model.prefill_fn(params, ids, state)
+
+    st_specs = state_specs(bundle, cell, seq_sharded=False)
+    logits_spec = P(bspec[0] if len(bspec) else None, "model")
+    if cfg.num_encoder_layers > 0:
+        in_specs = (bundle.leaf_specs, bspec, bspec, st_specs)
+    else:
+        in_specs = (bundle.leaf_specs, bspec, st_specs)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(logits_spec, st_specs),
+                   check_vma=_SERVE_CHECK)
+    return jax.jit(fn, donate_argnums=(2,) if cfg.num_encoder_layers == 0
+                   else (3,))
+
+
+def build_decode_step(bundle, seq_sharded: bool = False):
+    run, mesh = bundle.run, bundle.mesh
+    model = bundle.model
+    cell = run.shape
+    b_local, bspec = serve_batch_dims(bundle, cell, seq_sharded)
+
+    def body(params_leaves, tok, state):
+        params = jax.tree.unflatten(bundle.treedef, params_leaves)
+        return model.decode_fn(params, tok, state,
+                               seq_sharded=seq_sharded)
+
+    st_specs = state_specs(bundle, cell, seq_sharded)
+    logits_spec = P(bspec[0] if len(bspec) else None, "model")
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(bundle.leaf_specs, bspec, st_specs),
+                   out_specs=(logits_spec, st_specs),
+                   check_vma=_SERVE_CHECK)
+    return jax.jit(fn, donate_argnums=(2,))
+
+
+def state_specs(bundle, cell: ShapeCell, seq_sharded: bool):
+    """PartitionSpec tree matching init_decode_state's structure.
+
+    States carry GLOBAL logical shapes; these specs slice them:
+      - batch dim (1, after the stack dim) over the fsdp axes
+      - kv-cache seq dim over 'data' when seq_sharded (long-context)
+      - TP-owned dims ('model'): rwkv heads, mamba d_inner channels
+    """
+    from repro.compat import flatten_with_path
+    mi = bundle.mi
+    _, bspec = serve_batch_dims(bundle, cell, seq_sharded)
+    batch_axes = bspec[0] if len(bspec) else None
+    example = abstract_state(bundle, cell, seq_sharded)
+    paths, treedef = flatten_with_path(example)
+    specs = []
+    for path, arr in paths:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k)))
+                for k in path]
+        name = keys[-1]
+        kind = keys[-2] if len(keys) >= 2 else ""
+        nd = arr.ndim
+        ent = [None] * nd
+        if nd >= 2 and batch_axes is not None:
+            ent[1] = batch_axes
+        if kind in ("attn", "xattn") and name in ("k", "v"):
+            if seq_sharded and kind == "attn":
+                ent[2] = mi.seq_axis   # batch axes already exclude it
+            elif kind == "attn" and nd >= 4 and mi.tp > 1:
+                ent[3] = "model"       # TP-sharded kv-head slots
+        elif kind == "mamba":
+            if name == "conv" and nd >= 4:
+                ent[3] = "model"
+            elif name == "h" and nd >= 3:
+                ent[2] = "model"
+        elif kind == "rwkv_tm" and name == "s" and nd >= 3:
+            ent[2] = "model"
+        specs.append(P(*ent))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def abstract_state(bundle, cell: ShapeCell, seq_sharded: bool):
+    cfg = bundle.run.model
+    kw = {}
+    if cfg.num_encoder_layers > 0:
+        kw["enc_len"] = max(cell.seq_len // 4, 8)
+    return jax.eval_shape(
+        lambda: bundle.model.init_decode_state(
+            cell.global_batch, cell.seq_len, seq_sharded=seq_sharded,
+            **kw))

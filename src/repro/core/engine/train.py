@@ -1,0 +1,145 @@
+"""Train-step builder: shard_map orchestration, gradient flow
+(reduce-scatter via gather transposes), and optimizer application on
+ZeRO shards. Consumes a StepBundle whose strategy already fixed the
+storage layout and gather schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import HAS_VMA, all_gather_invariant, shard_map
+from repro.core.strategy import spec_axes
+from repro.launch.mesh import intra_fsdp_axes
+from repro.optim.adamw import adamw_update, clip_by_global_norm
+
+
+def build_train_step(bundle):
+    run, mesh, mi = bundle.run, bundle.mesh, bundle.mi
+    sys, opt_cfg = run.system, run.optimizer
+    model = bundle.model
+    train_defs = [bundle.def_leaves[i] for i in bundle.train_idx]
+    train_reps = [bundle.rep_factors[i] for i in bundle.train_idx]
+    wd_mask = [len(d.shape) >= 2 and "_lora_" not in d.label
+               for d in train_defs]
+    dp_axes = mi.fsdp_axes
+    tp_present = mi.tp > 1
+    cell = run.shape
+    bspecs = bundle.batch_spec(cell)
+    intra = intra_fsdp_axes(mesh)
+    # ZeRO-2 (weight-resident) leaves: params pod-sharded, opt fully
+    # sharded; grads get an extra intra-axis reduce-scatter, updated
+    # shards get one intra all-gather per step.
+    zero2 = [j for j, i in enumerate(bundle.train_idx)
+             if (bundle.leaf_specs[i] != bundle.full_specs[i]
+                 and bundle.def_leaves[i].fsdp_scope == "inter_only")]
+    z2_dims = {j: train_defs[j].fsdp_dim for j in zero2}
+
+    # Pre-VMA JAX: shard_map's AD does not auto-insert the cross-axis
+    # reductions for grads of params stored REPLICATED over some mesh
+    # axes (pod-replicated MiCS/frozen layouts, model-replicated kv/norm
+    # weights, min_shard_size-replicated tensors) -- each device would
+    # keep only its local partial. Current JAX's varying-mesh-axis type
+    # system inserts these psums automatically (transpose of the
+    # implicit pvary), so the explicit sum is gated on HAS_VMA. The
+    # gather transposes already reduce over the axes present in the
+    # storage spec; zero2 leaves' intra sum is handled by rs_intra.
+    grad_sync = {}
+    if not HAS_VMA:
+        for j, i in enumerate(bundle.train_idx):
+            if j in z2_dims:
+                continue
+            missing = tuple(a for a in mi.axis_names
+                            if a not in spec_axes(bundle.leaf_specs[i]))
+            if missing:
+                grad_sync[j] = missing
+
+    def rs_intra(g, dim):
+        return jax.lax.psum_scatter(g, intra, scatter_dimension=dim,
+                                    tiled=True)
+
+    def ag_intra(p_, dim):
+        for a in intra:
+            p_ = all_gather_invariant(p_, a, axis=dim, tiled=True)
+        return p_
+
+    def step_body(train_params, frozen_params, opt_state, batch):
+        def loss_fn(train_params):
+            params = bundle.merge(train_params, frozen_params)
+            loss_sum, cnt, aux = model.loss_fn(params, batch)
+            loss_sum = jax.lax.psum(loss_sum, dp_axes) if dp_axes else loss_sum
+            cnt = jax.lax.psum(cnt, dp_axes) if dp_axes else cnt
+            aux = jax.lax.psum(aux, dp_axes) if dp_axes else aux
+            ce = loss_sum / jnp.maximum(cnt, 1.0)
+            aux_n = aux / jnp.maximum(cnt, 1.0)
+            return ce + aux_n, (ce, aux_n, cnt)
+
+        if run.microbatch and run.microbatch > 1:
+            # gradient accumulation over microbatches
+            nm = run.microbatch
+            def mb_slice(x, i):
+                b = x.shape[0] // nm
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+            def acc_body(carry, i):
+                g_acc, ce_acc = carry
+                mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                def mb_loss(tp_):
+                    params = bundle.merge(tp_, frozen_params)
+                    ls, c, a = model.loss_fn(params, mb)
+                    ls = jax.lax.psum(ls, dp_axes) if dp_axes else ls
+                    c = jax.lax.psum(c, dp_axes) if dp_axes else c
+                    a = jax.lax.psum(a, dp_axes) if dp_axes else a
+                    return ls / jnp.maximum(c, 1.0) + a / jnp.maximum(c, 1.0), ls / jnp.maximum(c, 1.0)
+                (l, ce), g = jax.value_and_grad(mb_loss, has_aux=True)(train_params)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, ce_acc + ce), None
+            from repro.models.common import pvary_like
+            g0 = jax.tree.map(
+                lambda p_: pvary_like(jnp.zeros_like(p_), p_),
+                train_params)
+            # derive the loss-carry zero from a replicated input rather
+            # than a literal: scan requires the carry's replication type
+            # to match the body output's (which is replicated over every
+            # axis after the loss psums), and a bare constant carries no
+            # replication type on pre-VMA JAX
+            ce0 = (opt_state["step"] * 0).astype(jnp.float32)
+            (grads, ce_sum), _ = jax.lax.scan(
+                acc_body, (g0, ce0), jnp.arange(nm))
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            ce, auxl, cnt = ce_sum / nm, jnp.float32(0), jnp.float32(1)
+        else:
+            (_, (ce, auxl, cnt)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(train_params)
+
+        if grad_sync:
+            grads = [jax.lax.psum(g, grad_sync[j]) if j in grad_sync else g
+                     for j, g in enumerate(grads)]
+        if zero2:
+            grads = [rs_intra(g, z2_dims[j]) if j in z2_dims else g
+                     for j, g in enumerate(grads)]
+        grads, gnorm = clip_by_global_norm(
+            grads, train_reps, opt_cfg.grad_clip, dp_axes, tp_present)
+        new_params, new_opt = adamw_update(
+            grads, opt_state, opt_cfg, sys, wd_mask)
+        if zero2:
+            new_params = [ag_intra(p_, z2_dims[j]) if j in z2_dims else p_
+                          for j, p_ in enumerate(new_params)]
+        metrics = {"loss": ce, "aux_loss": auxl, "grad_norm": gnorm,
+                   "tokens": cnt}
+        return new_params, new_opt, metrics
+
+    train_specs = [bundle.leaf_specs[i] for i in bundle.train_idx]
+    frozen_specs = [bundle.leaf_specs[i] for i in bundle.frozen_idx]
+    opt_leaf_specs = [bundle.full_specs[i] for i in bundle.train_idx]
+    opt_specs = {"m": opt_leaf_specs, "v": opt_leaf_specs,
+                 "master": opt_leaf_specs, "step": P()}
+    metric_specs = {"loss": P(), "aux_loss": P(), "grad_norm": P(),
+                    "tokens": P()}
+
+    fn = shard_map(
+        step_body, mesh=mesh,
+        in_specs=(train_specs, frozen_specs, opt_specs, bspecs),
+        out_specs=(train_specs, opt_specs, metric_specs),
+        check_vma=True)
+    return jax.jit(fn, donate_argnums=(0, 2))

@@ -6,7 +6,8 @@ The paper's per-layer schedule (Fig. 4) maps onto JAX as:
   stage 2 (intra / ICI):  w_full  = all_gather(w_cache, 'data')
 
 The layer consuming ``w_full`` is wrapped in ``jax.checkpoint`` whose
-policy assigns the named value ``fcdp_cache`` to:
+policy assigns the named value ``fcdp_cache`` per the strategy's
+``cache_placement`` (see repro.core.strategy):
 
   zero3   -> Recompute   : backward re-runs stage 1 + stage 2 (2x inter AG)
   zeropp  -> Saveable    : cached shard lives in HBM, backward re-runs stage 2
@@ -23,19 +24,22 @@ paper's N=1 limit.
 Frozen parameters (FCDP-Comm) are *stored* in the cached layout
 (pod-replicated, intra-sharded, host-resident): their reconstruction
 never touches DCN and they receive no gradient. See core/comm.py.
+
+The gather is exposed both fused (``gather_param``) and split into its
+two stages (``gather_stage1`` / ``gather_stage2``) so the layer-ahead
+prefetch scheduler (models/stack.py) can issue layer i+1's stage-1 DCN
+gather concurrently with layer i's compute.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.partition import ParamDef, storage_fsdp_axes, tree_map_defs
-from repro.launch.mesh import fsdp_axes, intra_fsdp_axes
+from repro.compat import all_gather_invariant
+from repro.core.partition import ParamDef
+from repro.core.strategy import GatherPlan, resolve_strategy
 
 try:  # name-based remat policies need the `name` primitive
     from jax._src.ad_checkpoint import name_p
@@ -49,66 +53,24 @@ CACHE_NAME = "fcdp_cache"
 FULL_NAME = "fcdp_full"
 ACT_NAME = "act_ckpt"
 
-VALID_MODES = ("zero3", "zeropp", "fcdp", "mics")
 
-
-@dataclass(frozen=True)
-class GatherPlan:
-    """How one parameter is reconstructed inside the step function."""
-    fsdp_dim: Optional[int]          # dim index *inside the scan body*
-    inter_axes: Tuple[str, ...]      # stage-1 axes (DCN)
-    intra_axes: Tuple[str, ...]      # stage-2 axes (ICI)
-    cache_after: int                 # 1 or 2: where the cache boundary sits
-    frozen: bool = False
-    compress_bwd: bool = False       # int8 DCN gradient reduce (beyond-paper)
-
-    @property
-    def is_gathered(self) -> bool:
-        return self.fsdp_dim is not None and (bool(self.inter_axes) or bool(self.intra_axes))
-
-
-def make_gather_plan(pdef: ParamDef, mesh, mode: str,
+def make_gather_plan(pdef: ParamDef, mesh, mode,
                      min_shard_size: int = 0,
                      compress_bwd: bool = False) -> GatherPlan:
     """Derive the gather plan matching ``storage_spec`` for this param.
-
-    If the def carries a 'stack' (scan) dimension, the returned fsdp dim
-    index is shifted to the *scan-body* view (stack dim consumed by scan).
-    """
-    if mode not in VALID_MODES:
-        raise ValueError(f"unknown system mode {mode!r}")
-    d = pdef.fsdp_dim
-    if d is None or pdef.size() < min_shard_size:
-        return GatherPlan(None, (), (), 2, pdef.frozen)
-    from repro.core.partition import effective_fsdp_axes
-    axes = effective_fsdp_axes(pdef, mesh, mode)
-    degree = math.prod(mesh.shape[a] for a in axes) if axes else 1
-    if not axes or pdef.shape[d] % degree != 0:
-        return GatherPlan(None, (), (), 2, pdef.frozen)
-    inter = tuple(a for a in axes if a == "pod")
-    intra = tuple(a for a in axes if a != "pod")
-    # cache boundary: after the inter stage if one exists, else after the
-    # full gather (single-pod / pod-replicated storage).
-    cache_after = 1 if inter else 2
-    body_dim = d - 1 if ("stack" in pdef.dims and
-                         pdef.dims.index("stack") < d) else d
-    return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
-                      compress_bwd=(compress_bwd and bool(inter)
-                                    and not pdef.frozen))
+    ``mode`` is a strategy name or ShardingStrategy object."""
+    return resolve_strategy(mode).gather_plan(
+        pdef, mesh, min_shard_size, compress_bwd)
 
 
-def plan_tree(defs, mesh, mode: str, min_shard_size: int = 0,
+def plan_tree(defs, mesh, mode, min_shard_size: int = 0,
               compress_bwd: bool = False):
-    return tree_map_defs(
-        lambda p: make_gather_plan(p, mesh, mode, min_shard_size,
-                                   compress_bwd), defs)
+    return resolve_strategy(mode).plan_tree(
+        defs, mesh, min_shard_size, compress_bwd)
 
 
-def gather_param(w: jax.Array, plan: GatherPlan) -> jax.Array:
-    """Reconstruct the full (TP-local) parameter from its ZeRO shard.
-
-    Must run inside shard_map. Named checkpoints mark the cache boundary
-    for the remat policy.
+def _ag_fn(plan: GatherPlan):
+    """Gather primitive for this plan.
 
     Frozen params (FCDP-Comm / serving) gather with the *invariant*
     all-gather: they receive no gradient, and the invariant type keeps
@@ -116,31 +78,51 @@ def gather_param(w: jax.Array, plan: GatherPlan) -> jax.Array:
     serve-step output typing). Trainable params use the varying
     all-gather, whose transpose is the ZeRO-3 gradient reduce-scatter.
     """
-    if not plan.is_gathered:
-        return w
     if plan.frozen:
-        from jax._src.lax.parallel import all_gather_invariant as _agi
         def ag(x, axes, axis):
             for a in axes:  # invariant AG takes one axis at a time
-                x = _agi(x, a, axis=axis, tiled=True)
+                x = all_gather_invariant(x, a, axis=axis, tiled=True)
             return x
     else:
         def ag(x, axes, axis):
             return jax.lax.all_gather(x, axes, axis=axis, tiled=True)
-    d = plan.fsdp_dim
-    if plan.inter_axes:
-        if plan.compress_bwd and len(plan.inter_axes) == 1 and not plan.frozen:
-            from repro.core.grad_compress import compressed_stage1_gather
-            w = compressed_stage1_gather(w, plan.inter_axes[0], d)
-        else:
-            w = ag(w, plan.inter_axes, d)
+    return ag
+
+
+def gather_stage1(w: jax.Array, plan: GatherPlan) -> jax.Array:
+    """Stage 1 (inter / DCN) all-gather only: shard -> cached shard.
+
+    Identity when the plan has no inter axes (single pod, MiCS,
+    FCDP-Comm frozen layout). Must run inside shard_map."""
+    if not plan.is_gathered or not plan.inter_axes:
+        return w
+    if plan.compress_bwd and len(plan.inter_axes) == 1 and not plan.frozen:
+        from repro.core.grad_compress import compressed_stage1_gather
+        return compressed_stage1_gather(w, plan.inter_axes[0], plan.fsdp_dim)
+    return _ag_fn(plan)(w, plan.inter_axes, plan.fsdp_dim)
+
+
+def gather_stage2(w: jax.Array, plan: GatherPlan) -> jax.Array:
+    """Stage 2 (intra / ICI) all-gather: cached shard -> full (TP-local)
+    parameter, with the cache/full named-checkpoint boundaries marked for
+    the remat policy. Must run inside shard_map."""
+    if not plan.is_gathered:
+        return w
     if plan.cache_after == 1:
         w = checkpoint_name(w, CACHE_NAME)
     if plan.intra_axes:
-        w = ag(w, plan.intra_axes, d)
+        w = _ag_fn(plan)(w, plan.intra_axes, plan.fsdp_dim)
     if plan.cache_after == 2:
         w = checkpoint_name(w, CACHE_NAME)
     return checkpoint_name(w, FULL_NAME)
+
+
+def gather_param(w: jax.Array, plan: GatherPlan) -> jax.Array:
+    """Reconstruct the full (TP-local) parameter from its ZeRO shard
+    (both stages fused -- the sequential, non-prefetched schedule)."""
+    if not plan.is_gathered:
+        return w
+    return gather_stage2(gather_stage1(w, plan), plan)
 
 
 def gather_tree(params, plans):
@@ -210,14 +192,15 @@ def make_remat_policy(cache_placement: str, activation_policy: str = "save_all",
     return policy
 
 
-def cache_placement_for_mode(mode: str) -> str:
-    return {"zero3": "regather", "zeropp": "device",
-            "fcdp": "host", "mics": "regather"}[mode]
+def cache_placement_for_mode(mode) -> str:
+    return resolve_strategy(mode).cache_placement
 
 
-def checkpoint_layer(fn, mode: str, activation_policy: str = "save_all",
+def checkpoint_layer(fn, mode, activation_policy: str = "save_all",
                      host_offload: bool = True, placement: Optional[str] = None):
-    """Wrap a layer-apply function with the FCDP remat policy."""
-    pol = make_remat_policy(placement or cache_placement_for_mode(mode),
-                            activation_policy, host_offload)
+    """Wrap a layer-apply function with the FCDP remat policy.
+    ``mode`` is a strategy name or ShardingStrategy object."""
+    pol = make_remat_policy(
+        placement or resolve_strategy(mode).cache_placement,
+        activation_policy, host_offload)
     return jax.checkpoint(fn, policy=pol)

@@ -16,6 +16,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 BLOCK = 256
 
 
@@ -40,7 +42,7 @@ def int8_psum_scatter(g: jax.Array, axis_name: str, dim: int) -> jax.Array:
     the chunks so rank j receives every rank's chunk j, dequantizes and
     sums. Result: the local shard of the reduced tensor.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return g
     # move dim to front and split into n chunks

@@ -1,4 +1,4 @@
-"""Parameter partitioning: ZeRO-3 / MiCS / FCDP storage layouts.
+"""Parameter partitioning: ParamDef trees and their storage layouts.
 
 Every parameter is described by a ParamDef whose `dims` tag each array
 dimension with a logical role:
@@ -8,14 +8,12 @@ dimension with a logical role:
   'tp'    - tensor/expert-parallel dimension (owned shard, never gathered)
   None    - unsharded
 
-Storage layout per system mode (multi-pod mesh ('pod','data','model')):
-
-  zero3 / zeropp / fcdp : fsdp -> ('pod','data'), tp -> 'model'
-  mics                  : fsdp -> ('data',) [replicated over pod], tp -> 'model'
-  frozen (FCDP-Comm)    : fsdp -> ('data',) [replicated over pod], tp -> 'model'
-
-On the single-pod mesh ('data','model') there is no pod axis and the
-fsdp axes collapse to ('data',).
+WHICH mesh axes the fsdp dim shards over is a per-mode decision owned by
+``repro.core.strategy`` (full ('pod','data') sharding for the zero3-family
+strategies, pod-replicated ('data',) for MiCS and for frozen FCDP-Comm
+params). The module-level helpers here accept a mode name or a resolved
+``ShardingStrategy`` and delegate; on the single-pod mesh ('data','model')
+there is no pod axis and the fsdp axes collapse to ('data',).
 """
 from __future__ import annotations
 
@@ -28,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import fsdp_axes, inter_axis, intra_fsdp_axes
+from repro.compat import flatten_with_path
+from repro.core.strategy import resolve_strategy
 
 
 @dataclass(frozen=True)
@@ -71,7 +70,7 @@ def tree_map_defs(fn: Callable, tree, *rest):
 
 def label_tree(tree):
     """Attach dotted-path labels to every ParamDef in the tree."""
-    paths_vals, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_def)
+    paths_vals, treedef = flatten_with_path(tree, is_leaf=is_def)
     out = []
     for path, pdef in paths_vals:
         name = ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
@@ -83,40 +82,21 @@ def label_tree(tree):
 # Storage layout
 # ---------------------------------------------------------------------------
 
-def storage_fsdp_axes(mesh, mode: str, frozen: bool) -> Tuple[str, ...]:
+def storage_fsdp_axes(mesh, mode, frozen: bool) -> Tuple[str, ...]:
     """Which mesh axes the fsdp dim is sharded over in storage.
 
-    The pod-replicated cached layout for frozen params is FCDP-Comm's
-    mechanism and therefore applies only in fcdp mode; the zero3/zeropp
-    baselines treat frozen weights like any other (re-gathered over DCN
-    each iteration, as DeepSpeed does) -- that asymmetry IS the paper's
-    PEFT result. MiCS shards within the pod by design.
+    ``mode`` is a strategy name or ShardingStrategy; the layout decision
+    (and the FCDP-Comm frozen asymmetry) lives on the strategy object.
     """
-    if mode == "mics" or (frozen and mode == "fcdp"):
-        return intra_fsdp_axes(mesh)      # pod-replicated cached layout
-    return fsdp_axes(mesh)                 # full ZeRO-3 sharding
+    return resolve_strategy(mode).storage_fsdp_axes(mesh, frozen)
 
 
-def effective_fsdp_axes(pdef: "ParamDef", mesh, mode: str) -> Tuple[str, ...]:
-    axes = storage_fsdp_axes(mesh, mode, pdef.frozen)
-    if pdef.fsdp_scope == "inter_only":
-        axes = tuple(a for a in axes if a == "pod")
-    return axes
+def effective_fsdp_axes(pdef: "ParamDef", mesh, mode) -> Tuple[str, ...]:
+    return resolve_strategy(mode).effective_fsdp_axes(pdef, mesh)
 
 
-def storage_spec(pdef: ParamDef, mesh, mode: str, min_shard_size: int = 0) -> P:
-    entries: list = [None] * len(pdef.shape)
-    small = pdef.size() < min_shard_size
-    if pdef.tp_dim is not None:
-        entries[pdef.tp_dim] = "model"
-    if pdef.fsdp_dim is not None and not small:
-        axes = effective_fsdp_axes(pdef, mesh, mode)
-        if axes:
-            # only shard if divisible
-            degree = math.prod(mesh.shape[a] for a in axes)
-            if pdef.shape[pdef.fsdp_dim] % degree == 0:
-                entries[pdef.fsdp_dim] = axes if len(axes) > 1 else axes[0]
-    return P(*entries)
+def storage_spec(pdef: ParamDef, mesh, mode, min_shard_size: int = 0) -> P:
+    return resolve_strategy(mode).storage_spec(pdef, mesh, min_shard_size)
 
 
 def spec_tree(defs, mesh, mode: str, min_shard_size: int = 0):
@@ -155,7 +135,7 @@ def _init_one(key, pdef: ParamDef):
     return (jax.random.normal(key, pdef.shape, jnp.float32) * scale).astype(pdef.dtype)
 
 
-def init_params(defs, seed: int = 0, mesh=None, mode: str = "zero3",
+def init_params(defs, seed: int = 0, mesh=None, mode=None,
                 min_shard_size: int = 0):
     """Materialize parameters; with a mesh, place them in storage layout."""
     leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)

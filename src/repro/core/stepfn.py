@@ -1,435 +1,5 @@
-"""train_step / serve_step builders: shard_map orchestration, gradient
-flow (reduce-scatter via gather transposes), optimizer application on
-ZeRO shards, and ShapeDtypeStruct input_specs for the dry-run.
-"""
-from __future__ import annotations
+"""Back-compat shim: StepBundle moved to repro.core.engine (bundle.py for
+per-cell state, train.py / serve.py for the step builders)."""
+from repro.core.engine.bundle import StepBundle
 
-import dataclasses
-import math
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-from jax import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs.base import ModelConfig, RunConfig, ShapeCell, SystemConfig
-from repro.core import peft as peft_mod
-from repro.core.partition import (ParamDef, is_def, spec_tree, storage_spec,
-                                  shape_dtype_tree, init_params)
-from repro.launch.mesh import fsdp_axes
-from repro.models.common import MeshInfo
-from repro.models.registry import build_model
-from repro.optim.adamw import (adamw_update, clip_by_global_norm,
-                               init_opt_state)
-
-
-# ---------------------------------------------------------------------------
-# Bundle
-# ---------------------------------------------------------------------------
-
-class StepBundle:
-    """Everything needed to lower/run one (arch x shape x system) cell."""
-
-    def __init__(self, run: RunConfig, mesh):
-        self.run = run
-        self.mesh = mesh
-        self.mi = MeshInfo.from_mesh(mesh)
-        cfg, sys = run.model, run.system
-        self.model = build_model(cfg, sys, mesh)
-        defs = self.model.defs
-        if sys.peft:
-            defs = peft_mod.apply_lora(defs, cfg, sys)
-        elif run.shape.kind != "train" and sys.serve_frozen:
-            # serving: all weights frozen -> FCDP-Comm cached layout
-            defs = peft_mod.freeze_all(defs)
-        if defs is not self.model.defs:
-            self.model._defs = defs
-            from repro.core.fcdp import plan_tree
-            self.model._plans = plan_tree(
-                defs, mesh, sys.mode, sys.min_shard_size,
-                compress_bwd=(sys.grad_compress == "int8_pod"))
-        from repro.core.partition import label_tree
-        self.model._defs = label_tree(self.model.defs)
-        self.defs = self.model.defs
-        self.def_leaves, self.treedef = jax.tree.flatten(
-            self.defs, is_leaf=is_def)
-        self.train_idx = [i for i, d in enumerate(self.def_leaves)
-                          if not d.frozen]
-        self.frozen_idx = [i for i, d in enumerate(self.def_leaves)
-                           if d.frozen]
-        self.leaf_specs = [storage_spec(d, mesh, sys.mode, sys.min_shard_size)
-                           for d in self.def_leaves]
-        # ZeRO-2-for-experts: 'inter_only' (weight-resident) tensors keep
-        # their PARAMS pod-sharded but their OPTIMIZER state fully sharded;
-        # gradients are reduce-scattered over the intra axes before the
-        # update and the updated shard is gathered back once per step.
-        self.full_specs = [
-            storage_spec(dataclasses.replace(d, fsdp_scope="full"), mesh,
-                         sys.mode, sys.min_shard_size)
-            for d in self.def_leaves]
-        self.rep_factors = [self._replication(s) for s in self.full_specs]
-
-    def _replication(self, spec: P) -> float:
-        used = set()
-        for e in spec:
-            if e is None:
-                continue
-            if isinstance(e, (tuple, list)):
-                used.update(e)
-            else:
-                used.add(e)
-        rep = 1
-        for a in self.mi.axis_names:
-            if a not in used:
-                rep *= self.mi.size(a)
-        return float(rep)
-
-    # -- param materialization ------------------------------------------------
-    def init_all_params(self, seed: int = 0) -> List[jax.Array]:
-        sys = self.run.system
-        vals = init_params(self.defs, seed, self.mesh, sys.mode,
-                           sys.min_shard_size)
-        return jax.tree.leaves(vals)
-
-    def split(self, leaves: List[Any]) -> Tuple[List[Any], List[Any]]:
-        return ([leaves[i] for i in self.train_idx],
-                [leaves[i] for i in self.frozen_idx])
-
-    def merge(self, train: List[Any], frozen: List[Any]):
-        leaves: List[Any] = [None] * len(self.def_leaves)
-        for i, v in zip(self.train_idx, train):
-            leaves[i] = v
-        for i, v in zip(self.frozen_idx, frozen):
-            leaves[i] = v
-        return jax.tree.unflatten(self.treedef, leaves)
-
-    def _leaf_sds(self, idxs) -> List[jax.ShapeDtypeStruct]:
-        out = []
-        for i in idxs:
-            d = self.def_leaves[i]
-            out.append(jax.ShapeDtypeStruct(
-                d.shape, d.dtype,
-                sharding=NamedSharding(self.mesh, self.leaf_specs[i])))
-        return out
-
-    # -- batch specs ------------------------------------------------------
-    def batch_spec(self, cell: ShapeCell) -> Dict[str, P]:
-        dp = self.mi.dp
-        bspec = P(self.mi.fsdp_axes) if cell.global_batch % dp == 0 else P()
-        cfg = self.run.model
-        out = {"ids": bspec, "labels": bspec, "mask": bspec}
-        if cfg.num_encoder_layers > 0:
-            out["enc_embeds"] = bspec
-        return out
-
-    def batch_sds(self, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
-        cfg = self.run.model
-        B, S = cell.global_batch, cell.seq_len
-        specs = self.batch_spec(cell)
-        out = {
-            "ids": jax.ShapeDtypeStruct(
-                (B, S), jnp.int32,
-                sharding=NamedSharding(self.mesh, specs["ids"])),
-            "labels": jax.ShapeDtypeStruct(
-                (B, S), jnp.int32,
-                sharding=NamedSharding(self.mesh, specs["labels"])),
-            "mask": jax.ShapeDtypeStruct(
-                (B, S), jnp.bool_,
-                sharding=NamedSharding(self.mesh, specs["mask"])),
-        }
-        if cfg.num_encoder_layers > 0:
-            # audio frontend stub: precomputed frame embeddings, 1/4 length
-            out["enc_embeds"] = jax.ShapeDtypeStruct(
-                (B, max(S // 4, 8), cfg.d_model), jnp.bfloat16,
-                sharding=NamedSharding(self.mesh, specs["enc_embeds"]))
-        return out
-
-    # ======================================================================
-    # train step
-    # ======================================================================
-    def make_train_step(self):
-        run, mesh, mi = self.run, self.mesh, self.mi
-        sys, opt_cfg = run.system, run.optimizer
-        model = self.model
-        train_defs = [self.def_leaves[i] for i in self.train_idx]
-        train_reps = [self.rep_factors[i] for i in self.train_idx]
-        wd_mask = [len(d.shape) >= 2 and "_lora_" not in d.label
-                   for d in train_defs]
-        dp_axes = mi.fsdp_axes
-        tp_present = mi.tp > 1
-        cell = run.shape
-        bspecs = self.batch_spec(cell)
-        from repro.launch.mesh import intra_fsdp_axes
-        intra = intra_fsdp_axes(mesh)
-        # ZeRO-2 (weight-resident) leaves: params pod-sharded, opt fully
-        # sharded; grads get an extra intra-axis reduce-scatter, updated
-        # shards get one intra all-gather per step.
-        zero2 = [j for j, i in enumerate(self.train_idx)
-                 if (self.leaf_specs[i] != self.full_specs[i]
-                     and self.def_leaves[i].fsdp_scope == "inter_only")]
-        z2_dims = {j: train_defs[j].fsdp_dim for j in zero2}
-
-        def rs_intra(g, dim):
-            return jax.lax.psum_scatter(g, intra, scatter_dimension=dim,
-                                        tiled=True)
-
-        def ag_intra(p_, dim):
-            from jax._src.lax.parallel import all_gather_invariant
-            for a in intra:
-                p_ = all_gather_invariant(p_, a, axis=dim, tiled=True)
-            return p_
-
-        def step_body(train_params, frozen_params, opt_state, batch):
-            def loss_fn(train_params):
-                params = self.merge(train_params, frozen_params)
-                loss_sum, cnt, aux = model.loss_fn(params, batch)
-                loss_sum = jax.lax.psum(loss_sum, dp_axes) if dp_axes else loss_sum
-                cnt = jax.lax.psum(cnt, dp_axes) if dp_axes else cnt
-                aux = jax.lax.psum(aux, dp_axes) if dp_axes else aux
-                ce = loss_sum / jnp.maximum(cnt, 1.0)
-                aux_n = aux / jnp.maximum(cnt, 1.0)
-                return ce + aux_n, (ce, aux_n, cnt)
-
-            if run.microbatch and run.microbatch > 1:
-                # gradient accumulation over microbatches
-                nm = run.microbatch
-                def mb_slice(x, i):
-                    b = x.shape[0] // nm
-                    return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
-                def acc_body(carry, i):
-                    g_acc, ce_acc = carry
-                    mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
-                    def mb_loss(tp_):
-                        params = self.merge(tp_, frozen_params)
-                        ls, c, a = model.loss_fn(params, mb)
-                        ls = jax.lax.psum(ls, dp_axes) if dp_axes else ls
-                        c = jax.lax.psum(c, dp_axes) if dp_axes else c
-                        a = jax.lax.psum(a, dp_axes) if dp_axes else a
-                        return ls / jnp.maximum(c, 1.0) + a / jnp.maximum(c, 1.0), ls / jnp.maximum(c, 1.0)
-                    (l, ce), g = jax.value_and_grad(mb_loss, has_aux=True)(train_params)
-                    g_acc = jax.tree.map(jnp.add, g_acc, g)
-                    return (g_acc, ce_acc + ce), None
-                from repro.models.common import pvary_like
-                g0 = jax.tree.map(
-                    lambda p_: pvary_like(jnp.zeros_like(p_), p_),
-                    train_params)
-                (grads, ce_sum), _ = jax.lax.scan(
-                    acc_body, (g0, jnp.float32(0)), jnp.arange(nm))
-                grads = jax.tree.map(lambda g: g / nm, grads)
-                ce, auxl, cnt = ce_sum / nm, jnp.float32(0), jnp.float32(1)
-            else:
-                (_, (ce, auxl, cnt)), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(train_params)
-
-            if zero2:
-                grads = [rs_intra(g, z2_dims[j]) if j in z2_dims else g
-                         for j, g in enumerate(grads)]
-            grads, gnorm = clip_by_global_norm(
-                grads, train_reps, opt_cfg.grad_clip, dp_axes, tp_present)
-            new_params, new_opt = adamw_update(
-                grads, opt_state, opt_cfg, sys, wd_mask)
-            if zero2:
-                new_params = [ag_intra(p_, z2_dims[j]) if j in z2_dims else p_
-                              for j, p_ in enumerate(new_params)]
-            metrics = {"loss": ce, "aux_loss": auxl, "grad_norm": gnorm,
-                       "tokens": cnt}
-            return new_params, new_opt, metrics
-
-        train_specs = [self.leaf_specs[i] for i in self.train_idx]
-        frozen_specs = [self.leaf_specs[i] for i in self.frozen_idx]
-        opt_leaf_specs = [self.full_specs[i] for i in self.train_idx]
-        opt_specs = {"m": opt_leaf_specs, "v": opt_leaf_specs,
-                     "master": opt_leaf_specs, "step": P()}
-        metric_specs = {"loss": P(), "aux_loss": P(), "grad_norm": P(),
-                        "tokens": P()}
-
-        fn = shard_map(
-            step_body, mesh=mesh,
-            in_specs=(train_specs, frozen_specs, opt_specs, bspecs),
-            out_specs=(train_specs, opt_specs, metric_specs),
-            check_vma=True)
-        return jax.jit(fn, donate_argnums=(0, 2))
-
-    def train_input_sds(self):
-        """ShapeDtypeStructs for lowering the train step (no allocation)."""
-        sys = self.run.system
-        train_sds = self._leaf_sds(self.train_idx)
-        frozen_sds = self._leaf_sds(self.frozen_idx)
-        od, md = jnp.dtype(sys.opt_state_dtype), jnp.dtype(sys.master_dtype)
-        opt_sh = [NamedSharding(self.mesh, self.full_specs[i])
-                  for i in self.train_idx]
-        def with_dtype(dt):
-            return [jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
-                    for s, sh in zip(train_sds, opt_sh)]
-        opt_sds = {"m": with_dtype(od),
-                   "v": with_dtype(od),
-                   "master": with_dtype(md),
-                   "step": jax.ShapeDtypeStruct(
-                       (), jnp.int32,
-                       sharding=NamedSharding(self.mesh, P()))}
-        return train_sds, frozen_sds, opt_sds, self.batch_sds(self.run.shape)
-
-    # ======================================================================
-    # serve steps (prefill / decode)
-    # ======================================================================
-    def _serve_batch_dims(self, cell: ShapeCell,
-                          seq_sharded: bool = False) -> Tuple[int, P]:
-        """Batch sharding for serving. When the sequence dimension owns
-        'data' (long-context), batch may only use the remaining fsdp axes."""
-        mi = self.mi
-        axes = tuple(a for a in mi.fsdp_axes
-                     if not (seq_sharded and a == mi.seq_axis))
-        deg = 1
-        for a in axes:
-            deg *= mi.size(a)
-        if axes and cell.global_batch % deg == 0:
-            return cell.global_batch // deg, P(axes)
-        return cell.global_batch, P()
-
-    def make_prefill_step(self):
-        run, mesh, mi = self.run, self.mesh, self.mi
-        model = self.model
-        cell = run.shape
-        b_local, bspec = self._serve_batch_dims(cell)
-        cfg = run.model
-
-        if cfg.num_encoder_layers > 0:
-            def body(params_leaves, enc_embeds, ids, state):
-                params = jax.tree.unflatten(self.treedef, params_leaves)
-                return model.prefill_fn(params, enc_embeds, ids, state)
-        else:
-            def body(params_leaves, ids, state):
-                params = jax.tree.unflatten(self.treedef, params_leaves)
-                return model.prefill_fn(params, ids, state)
-
-        state_specs = self._state_specs(cell, seq_sharded=False)
-        logits_spec = P(bspec[0] if len(bspec) else None, "model")
-        if cfg.num_encoder_layers > 0:
-            in_specs = (self.leaf_specs, bspec, bspec, state_specs)
-        else:
-            in_specs = (self.leaf_specs, bspec, state_specs)
-        fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=(logits_spec, state_specs),
-                       check_vma=True)
-        return jax.jit(fn, donate_argnums=(2,) if cfg.num_encoder_layers == 0
-                       else (3,))
-
-    def make_decode_step(self, seq_sharded: bool = False):
-        run, mesh, mi = self.run, self.mesh, self.mi
-        model = self.model
-        cell = run.shape
-        b_local, bspec = self._serve_batch_dims(cell, seq_sharded)
-
-        def body(params_leaves, tok, state):
-            params = jax.tree.unflatten(self.treedef, params_leaves)
-            return model.decode_fn(params, tok, state,
-                                   seq_sharded=seq_sharded)
-
-        state_specs = self._state_specs(cell, seq_sharded)
-        logits_spec = P(bspec[0] if len(bspec) else None, "model")
-        fn = shard_map(body, mesh=mesh,
-                       in_specs=(self.leaf_specs, bspec, state_specs),
-                       out_specs=(logits_spec, state_specs),
-                       check_vma=True)
-        return jax.jit(fn, donate_argnums=(2,))
-
-    def _state_specs(self, cell: ShapeCell, seq_sharded: bool):
-        """PartitionSpec tree matching init_decode_state's structure.
-
-        States carry GLOBAL logical shapes; these specs slice them:
-          - batch dim (1, after the stack dim) over the fsdp axes
-          - kv-cache seq dim over 'data' when seq_sharded (long-context)
-          - TP-owned dims ('model'): rwkv heads, mamba d_inner channels
-        """
-        mi = self.mi
-        _, bspec = self._serve_batch_dims(cell, seq_sharded)
-        batch_axes = bspec[0] if len(bspec) else None
-        example = self._abstract_state(cell, seq_sharded)
-        paths, treedef = jax.tree.flatten_with_path(example)
-        specs = []
-        for path, arr in paths:
-            keys = [str(getattr(k, "key", getattr(k, "idx", k)))
-                    for k in path]
-            name = keys[-1]
-            kind = keys[-2] if len(keys) >= 2 else ""
-            nd = arr.ndim
-            ent = [None] * nd
-            if nd >= 2 and batch_axes is not None:
-                ent[1] = batch_axes
-            if kind in ("attn", "xattn") and name in ("k", "v"):
-                if seq_sharded and kind == "attn":
-                    ent[2] = mi.seq_axis   # batch axes already exclude it
-                elif kind == "attn" and nd >= 4 and mi.tp > 1:
-                    ent[3] = "model"       # TP-sharded kv-head slots
-            elif kind == "mamba":
-                if name == "conv" and nd >= 4:
-                    ent[3] = "model"
-                elif name == "h" and nd >= 3:
-                    ent[2] = "model"
-            elif kind == "rwkv_tm" and name == "s" and nd >= 3:
-                ent[2] = "model"
-            specs.append(P(*ent))
-        return jax.tree.unflatten(treedef, specs)
-
-    def _abstract_state(self, cell: ShapeCell, seq_sharded: bool):
-        cfg = self.run.model
-        kw = {}
-        if cfg.num_encoder_layers > 0:
-            kw["enc_len"] = max(cell.seq_len // 4, 8)
-        return jax.eval_shape(
-            lambda: self.model.init_decode_state(
-                cell.global_batch, cell.seq_len, seq_sharded=seq_sharded,
-                **kw))
-
-    def init_state(self, cell: ShapeCell, seq_sharded: bool = False):
-        """Materialize a decode state placed per _state_specs (smoke/serve)."""
-        cfg = self.run.model
-        kw = {}
-        if cfg.num_encoder_layers > 0:
-            kw["enc_len"] = max(cell.seq_len // 4, 8)
-        specs = self._state_specs(cell, seq_sharded)
-        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
-        fn = jax.jit(lambda: self.model.init_decode_state(
-            cell.global_batch, cell.seq_len, seq_sharded=seq_sharded, **kw),
-            out_shardings=shardings)
-        return fn()
-
-    def state_sds(self, cell: ShapeCell, seq_sharded: bool):
-        """ShapeDtypeStruct state tree with shardings for dry-run."""
-        abstract = self._abstract_state(cell, seq_sharded)
-        specs = self._state_specs(cell, seq_sharded)
-
-        def glue(a, s):
-            return jax.ShapeDtypeStruct(
-                a.shape, a.dtype, sharding=NamedSharding(self.mesh, s))
-        return jax.tree.map(glue, abstract, specs)
-
-    def prefill_input_sds(self):
-        """Inputs for lowering the prefill step."""
-        cell = self.run.shape
-        cfg = self.run.model
-        params_sds = self._leaf_sds(range(len(self.def_leaves)))
-        _, bspec = self._serve_batch_dims(cell)
-        B, S = cell.global_batch, cell.seq_len
-        ids = jax.ShapeDtypeStruct(
-            (B, S), jnp.int32, sharding=NamedSharding(self.mesh, bspec))
-        state = self.state_sds(cell, seq_sharded=False)
-        if cfg.num_encoder_layers > 0:
-            enc = jax.ShapeDtypeStruct(
-                (B, max(S // 4, 8), cfg.d_model), jnp.bfloat16,
-                sharding=NamedSharding(self.mesh, bspec))
-            return params_sds, enc, ids, state
-        return params_sds, ids, state
-
-    def decode_input_sds(self, seq_sharded: bool = False):
-        """Inputs for lowering one decode step."""
-        cell = self.run.shape
-        params_sds = self._leaf_sds(range(len(self.def_leaves)))
-        _, bspec = self._serve_batch_dims(cell, seq_sharded)
-        tok = jax.ShapeDtypeStruct(
-            (cell.global_batch, 1), jnp.int32,
-            sharding=NamedSharding(self.mesh, bspec))
-        state = self.state_sds(cell, seq_sharded=seq_sharded)
-        return params_sds, tok, state
+__all__ = ["StepBundle"]

@@ -1,0 +1,294 @@
+"""Pluggable sharding strategies: each system mode as one object.
+
+The paper's contribution is a *schedule* -- where each mode places the
+cached parameter shard and which all-gather stage the backward pass
+re-runs. A ``ShardingStrategy`` centralizes every decision a mode makes:
+
+  storage layout      which mesh axes the fsdp dim shards over, per
+                      (frozen, fsdp_scope) classification
+  gather plan         the two-stage reconstruction schedule (inter/DCN
+                      stage 1, intra/ICI stage 2) and the cache boundary
+  cache placement     where the remat policy parks the stage-1 result
+                      ('regather' | 'device' | 'host')
+  device-cache split  how FCDP-Cache's tau fraction maps to layer groups
+  prefetch gating     whether the layer-ahead stage-1 prefetch applies
+  byte accounting     analytic cache/comm sizes for the planner/roofline
+
+``SystemConfig.mode`` is resolved to a strategy object exactly once (at
+``StepBundle``/model construction) via :func:`get_strategy`; no other
+module compares mode strings.
+
+The four built-ins mirror the paper's comparison set:
+
+  zero3   full ('pod','data') sharding, regather fwd+bwd     (baseline)
+  zeropp  full sharding, stage-1 result cached in HBM        (ZeRO++)
+  fcdp    full sharding, stage-1 result cached in pinned
+          host memory; frozen params stored pre-gathered     (the paper)
+  mics    pod-replicated ('data',) sharding; no DCN gathers  (MiCS)
+
+New modes register with :func:`register_strategy` (e.g. a hierarchical-
+partitioning strategy that shards optimizer state wider than params).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Type, Union
+
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import fsdp_axes, intra_fsdp_axes
+
+INTER_AXIS = "pod"     # the slow (DCN) mesh axis name
+
+
+def spec_axes(spec: P) -> set:
+    """Set of mesh axis names a PartitionSpec shards over."""
+    used: set = set()
+    for e in spec:
+        if e is None:
+            continue
+        if isinstance(e, (tuple, list)):
+            used.update(e)
+        else:
+            used.add(e)
+    return used
+
+
+@dataclass(frozen=True)
+class GatherPlan:
+    """How one parameter is reconstructed inside the step function."""
+    fsdp_dim: Optional[int]          # dim index *inside the scan body*
+    inter_axes: Tuple[str, ...]      # stage-1 axes (DCN)
+    intra_axes: Tuple[str, ...]      # stage-2 axes (ICI)
+    cache_after: int                 # 1 or 2: where the cache boundary sits
+    frozen: bool = False
+    compress_bwd: bool = False       # int8 DCN gradient reduce (beyond-paper)
+
+    @property
+    def is_gathered(self) -> bool:
+        return self.fsdp_dim is not None and (bool(self.inter_axes) or bool(self.intra_axes))
+
+    @property
+    def prefetchable(self) -> bool:
+        """True when a non-empty stage-1 exists to issue a layer ahead."""
+        return self.is_gathered and bool(self.inter_axes)
+
+
+class ShardingStrategy:
+    """Base class owning everything a system mode decides.
+
+    Subclasses override the class attributes (and, rarely, the layout
+    methods) rather than re-deriving behaviour from the mode name.
+    """
+
+    name: str = "base"
+    # where the remat policy parks the cached stage-1 shard for backward:
+    # 'regather' (recompute both stages), 'device' (HBM), 'host' (pinned)
+    cache_placement: str = "regather"
+    # frozen (FCDP-Comm) params stored in the pod-replicated cached layout
+    frozen_cached_layout: bool = False
+    # FCDP-Cache's tau knob (device_cache_fraction) applies
+    supports_device_cache: bool = False
+    # layer-ahead stage-1 prefetch can apply (False when stage 1 is
+    # structurally empty, as for MiCS)
+    supports_prefetch: bool = True
+
+    # -- storage layout -----------------------------------------------------
+    def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
+        """Mesh axes the fsdp dim shards over in storage.
+
+        The pod-replicated cached layout for frozen params is FCDP-Comm's
+        mechanism (frozen_cached_layout); baselines treat frozen weights
+        like any other, re-gathered over DCN each iteration as DeepSpeed
+        does -- that asymmetry IS the paper's PEFT result.
+        """
+        if frozen and self.frozen_cached_layout:
+            return intra_fsdp_axes(mesh)   # pod-replicated cached layout
+        return fsdp_axes(mesh)             # full ZeRO-3 sharding
+
+    def effective_fsdp_axes(self, pdef, mesh) -> Tuple[str, ...]:
+        axes = self.storage_fsdp_axes(mesh, pdef.frozen)
+        if pdef.fsdp_scope == "inter_only":
+            axes = tuple(a for a in axes if a == INTER_AXIS)
+        return axes
+
+    def storage_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+        entries: list = [None] * len(pdef.shape)
+        small = pdef.size() < min_shard_size
+        if pdef.tp_dim is not None:
+            entries[pdef.tp_dim] = "model"
+        if pdef.fsdp_dim is not None and not small:
+            axes = self.effective_fsdp_axes(pdef, mesh)
+            if axes:
+                # only shard if divisible
+                degree = math.prod(mesh.shape[a] for a in axes)
+                if pdef.shape[pdef.fsdp_dim] % degree == 0:
+                    entries[pdef.fsdp_dim] = axes if len(axes) > 1 else axes[0]
+        return P(*entries)
+
+    # -- gather schedule ----------------------------------------------------
+    def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
+                    compress_bwd: bool = False) -> GatherPlan:
+        """Derive the two-stage gather plan matching ``storage_spec``.
+
+        If the def carries a 'stack' (scan) dimension, the returned fsdp
+        dim index is shifted to the *scan-body* view (stack dim consumed
+        by scan).
+        """
+        d = pdef.fsdp_dim
+        if d is None or pdef.size() < min_shard_size:
+            return GatherPlan(None, (), (), 2, pdef.frozen)
+        axes = self.effective_fsdp_axes(pdef, mesh)
+        degree = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if not axes or pdef.shape[d] % degree != 0:
+            return GatherPlan(None, (), (), 2, pdef.frozen)
+        inter = tuple(a for a in axes if a == INTER_AXIS)
+        intra = tuple(a for a in axes if a != INTER_AXIS)
+        # cache boundary: after the inter stage if one exists, else after
+        # the full gather (single-pod / pod-replicated storage).
+        cache_after = 1 if inter else 2
+        body_dim = d - 1 if ("stack" in pdef.dims and
+                             pdef.dims.index("stack") < d) else d
+        return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
+                          compress_bwd=(compress_bwd and bool(inter)
+                                        and not pdef.frozen))
+
+    def plan_tree(self, defs, mesh, min_shard_size: int = 0,
+                  compress_bwd: bool = False):
+        from repro.core.partition import tree_map_defs
+        return tree_map_defs(
+            lambda p: self.gather_plan(p, mesh, min_shard_size, compress_bwd),
+            defs)
+
+    # -- FCDP-Cache ----------------------------------------------------------
+    def device_cache_groups(self, n_groups: int, fraction: float) -> int:
+        """How many leading layer groups keep their cache on device."""
+        if not self.supports_device_cache:
+            return 0
+        return int(round(fraction * n_groups))
+
+    # -- prefetch -------------------------------------------------------------
+    def prefetch_active(self, sys, mesh_like) -> bool:
+        """Whether the layer-ahead stage-1 prefetch schedule applies.
+
+        mesh_like: anything with ``axis_names`` (Mesh or MeshInfo).
+        A no-op when the mode has no stage-1 (MiCS) or the mesh has no
+        slow tier (single pod): there is nothing to overlap.
+        """
+        return (bool(getattr(sys, "prefetch", False))
+                and self.supports_prefetch
+                and INTER_AXIS in tuple(mesh_like.axis_names))
+
+    # -- analytic byte accounting --------------------------------------------
+    def cached_bytes_for(self, pdef, plan: GatherPlan, mi) -> float:
+        """Per-chip size of this param's cached tier (0 when regathered).
+
+        cache_after=1 (multi-pod): the stage-1 shard, i.e. the chip's
+        storage shard gathered over the inter axes.
+        cache_after=2 (single-pod): the fully gathered TP-local weight.
+        """
+        if not plan.is_gathered:
+            return 0.0
+        import jax
+        nbytes = pdef.size() * jax.dtypes.canonicalize_dtype(
+            pdef.dtype).itemsize
+        if plan.cache_after == 1:
+            shard = nbytes / self._storage_degree(pdef, mi)
+            inter_deg = math.prod(mi.size(a) for a in plan.inter_axes) or 1
+            return shard * inter_deg
+        return nbytes / (mi.tp if pdef.tp_dim is not None else 1)
+
+    @staticmethod
+    def _storage_degree(pdef, mi) -> int:
+        deg = 1
+        if pdef.fsdp_dim is not None:
+            for a in mi.fsdp_axes:
+                deg *= mi.size(a)
+        if pdef.tp_dim is not None:
+            deg *= mi.tp
+        return deg
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+# Concrete strategies
+# ---------------------------------------------------------------------------
+
+class Zero3(ShardingStrategy):
+    """Full sharding, re-gather forward AND backward (paper baseline)."""
+    name = "zero3"
+    cache_placement = "regather"
+
+
+class ZeroPP(ShardingStrategy):
+    """Full sharding; stage-1 result cached in HBM, backward re-runs
+    stage 2 only (ZeRO++ analog)."""
+    name = "zeropp"
+    cache_placement = "device"
+
+
+class FCDP(ShardingStrategy):
+    """Full sharding; stage-1 result cached in pinned host memory,
+    backward re-runs stage 2 only (the paper). Frozen params store in the
+    cached layout (FCDP-Comm) and the tau device-cache split applies
+    (FCDP-Cache)."""
+    name = "fcdp"
+    cache_placement = "host"
+    frozen_cached_layout = True
+    supports_device_cache = True
+
+
+class MiCS(ShardingStrategy):
+    """Pod-local (subgroup) sharding: storage is already pod-replicated,
+    stage 1 is structurally empty, and the single intra stage recomputes
+    (fwd+bwd intra AG, no DCN AG). Gradients all-reduce across pods."""
+    name = "mics"
+    cache_placement = "regather"
+    supports_prefetch = False
+
+    def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
+        return intra_fsdp_axes(mesh)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ShardingStrategy] = {}
+
+
+def register_strategy(cls: Type[ShardingStrategy]) -> Type[ShardingStrategy]:
+    """Register a strategy class under its ``name`` (singleton instance)."""
+    if not cls.name or cls.name == "base":
+        raise ValueError(f"strategy {cls.__name__} needs a unique name")
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+for _cls in (Zero3, ZeroPP, FCDP, MiCS):
+    register_strategy(_cls)
+
+DEFAULT_STRATEGY = FCDP.name
+
+
+def strategy_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_strategy(name: str) -> ShardingStrategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown system mode {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def resolve_strategy(mode: Union[str, ShardingStrategy]) -> ShardingStrategy:
+    """Accept a mode name or an already-resolved strategy object."""
+    if isinstance(mode, ShardingStrategy):
+        return mode
+    return get_strategy(mode)

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.configs.base import (RunConfig, SystemConfig, shape_cell,
                                 SHAPE_CELLS)
 from repro.configs.registry import (ARCH_IDS, cell_supported, get_config)
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
+from repro.core.strategy import DEFAULT_STRATEGY, strategy_names
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collect_collectives, flops_bytes_from_jaxpr,
                                    parse_stablehlo_counts, roofline_report)
@@ -36,8 +37,8 @@ def _mesh_sizes(mesh):
 
 
 def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
-                mode: str = "fcdp", system_overrides=None,
-                verbose: bool = True):
+                mode: str = DEFAULT_STRATEGY, system_overrides=None,
+                verbose: bool = True, prefetch: bool = True):
     cfg = get_config(arch)
     cell = shape_cell(cell_name)
     ok, why = cell_supported(cfg, cell)
@@ -49,12 +50,16 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     # 16 GB v5e at the assigned shapes; the paper-faithful save_all
     # variant is compared in benchmarks/bench_memory.py (see EXPERIMENTS.md)
     sysc = SystemConfig(mode=mode, loss_chunk=2048,
-                        activation_policy="block_io")
+                        activation_policy="block_io", prefetch=prefetch)
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
     run = RunConfig(model=cfg, shape=cell, system=sysc)
     t0 = time.time()
     bundle = StepBundle(run, mesh)
+    # does the resolved strategy actually run the prefetch schedule on
+    # this (mode x mesh x cell)? mirrored into the roofline overlap model
+    prefetch_live = (cell.kind == "train"
+                     and bundle.strategy.prefetch_active(sysc, mesh))
     seq_sharded = (cell.name == "long_500k")
     if cell.kind == "train":
         step = bundle.make_train_step()
@@ -86,7 +91,8 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         ca = ca[0]
     flops_ca = float(ca.get("flops", 0.0))     # lower bound: loops counted 1x
     bytes_ca = float(ca.get("bytes accessed", 0.0))
-    rep = roofline_report(flops_exact, bytes_naive, stats, cfg, cell, n_chips)
+    rep = roofline_report(flops_exact, bytes_naive, stats, cfg, cell, n_chips,
+                          prefetch=prefetch_live)
     result = {
         "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
         "mode": mode, "status": "ok",
@@ -131,8 +137,10 @@ def main():
                     choices=[c.name for c in SHAPE_CELLS] + [None])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--single-pod", action="store_true")
-    ap.add_argument("--mode", default="fcdp",
-                    choices=["zero3", "zeropp", "fcdp", "mics"])
+    ap.add_argument("--mode", default=DEFAULT_STRATEGY,
+                    choices=list(strategy_names()))
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the layer-ahead stage-1 gather prefetch")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x cell) on both meshes")
     ap.add_argument("--out", default=None)
@@ -156,7 +164,8 @@ def main():
     failures = 0
     for arch, cell, mp in combos:
         try:
-            r = dryrun_cell(arch, cell, mp, args.mode)
+            r = dryrun_cell(arch, cell, mp, args.mode,
+                            prefetch=not args.no_prefetch)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,

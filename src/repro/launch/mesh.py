@@ -15,21 +15,18 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
+from repro.compat import make_mesh as _compat_make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Arbitrary mesh with Auto axis types (smoke tests, elastic re-mesh)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _compat_make_mesh(shape, axes)
 
 
 def make_smoke_mesh(n_devices: Optional[int] = None):

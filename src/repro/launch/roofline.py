@@ -49,7 +49,10 @@ COLLECTIVE_PRIMS = {
     "reduce_scatter": "psum_scatter",
     "all_to_all": "all_to_all",
     "ppermute": "ppermute",
-    "pbroadcast": "ppermute",
+    # NOT counted: pbroadcast / pvary are replication-type casts inserted
+    # by shard_map's rep machinery (pre-VMA rewrite pass resp. VMA
+    # typing); the value already lives on every device, so they move
+    # zero bytes and lower to nothing.
 }
 
 
@@ -279,17 +282,39 @@ def model_flops(cfg, cell, n_chips: int) -> float:
 
 def roofline_report(flops_per_chip: float, bytes_per_chip: float,
                     stats: CollectiveStats, cfg, cell,
-                    n_chips: int) -> Dict[str, Any]:
+                    n_chips: int, prefetch: bool = False) -> Dict[str, Any]:
+    """Derive the three roofline terms, plus -- when the layer-ahead
+    prefetch schedule is active -- the overlap credit: the stage-1
+    (pod-axis) parameter all-gathers are issued one layer ahead of the
+    compute that consumes them, so their time hides under compute up to
+    the compute term itself. ``collective_exposed_s`` is the collective
+    time that remains on the critical path after that credit; modes with
+    no stage-1 (MiCS, frozen layouts, single-pod meshes) have zero
+    pod-axis AG bytes and are reported unchanged.
+    """
     compute_t = flops_per_chip / PEAK_FLOPS
     memory_t = bytes_per_chip / HBM_BW
     ici_t = stats.ici_bytes / ICI_BW
     dcn_t = stats.dcn_bytes / DCN_BW
     coll_t = ici_t + dcn_t
-    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    # stage-1 parameter gathers: the overlappable DCN term
+    stage1_ag_bytes = stats.by_op_axis.get("all_gather/pod", 0.0)
+    overlapped_bytes = stage1_ag_bytes if prefetch else 0.0
+    overlapped_t = min(overlapped_bytes / DCN_BW, compute_t)
+    coll_exposed_t = coll_t - overlapped_t
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_exposed_t}
     dominant = max(terms, key=terms.get)
     mf = model_flops(cfg, cell, n_chips)
     hlo_total = flops_per_chip * n_chips
     return {
+        "prefetch": {
+            "enabled": bool(prefetch),
+            "stage1_ag_dcn_bytes_per_chip": stage1_ag_bytes,
+            "overlapped_dcn_bytes_per_chip": overlapped_bytes,
+            "overlapped_s": overlapped_t,
+            "collective_exposed_s": coll_exposed_t,
+        },
         "compute_s": compute_t,
         "memory_s": memory_t,
         "collective_s": coll_t,

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import RunConfig, ShapeCell, SystemConfig, shape_cell
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 
 
@@ -40,7 +40,7 @@ def main(argv=None):
     max_len = args.prompt_len + args.gen_len
     cell = ShapeCell("serve", "decode", max_len, args.batch)
     run = RunConfig(model=cfg, shape=cell,
-                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+                    system=SystemConfig(min_shard_size=8))
     bundle = StepBundle(run, mesh)
     params = bundle.init_all_params(seed=0)
 

@@ -22,7 +22,8 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
                                 SystemConfig, shape_cell)
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
+from repro.core.strategy import DEFAULT_STRATEGY, strategy_names
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.optim.adamw import init_opt_state
@@ -45,7 +46,8 @@ def build(args):
                         activation_policy=args.activation_policy,
                         loss_chunk=args.loss_chunk,
                         min_shard_size=8 if args.smoke else 2048,
-                        grad_compress=args.grad_compress)
+                        grad_compress=args.grad_compress,
+                        prefetch=args.prefetch)
     run = RunConfig(model=cfg, shape=cell, system=sysc,
                     optimizer=OptimizerConfig(
                         lr=args.lr, total_steps=args.steps,
@@ -81,8 +83,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--cell", default="train_4k")
-    ap.add_argument("--mode", default="fcdp",
-                    choices=["zero3", "zeropp", "fcdp", "mics"])
+    ap.add_argument("--mode", default=DEFAULT_STRATEGY,
+                    choices=list(strategy_names()))
+    ap.add_argument("--prefetch", action="store_true",
+                    help="layer-ahead stage-1 gather prefetch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--peft", action="store_true")

@@ -9,6 +9,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import pvary, typeof
+
 
 @dataclass(frozen=True)
 class MeshInfo:
@@ -71,7 +73,7 @@ def tp_region_in(x, mi: MeshInfo):
     act_psum='int8' the implicit backward all-reduce on this tensor's
     cotangent runs in int8 (Megatron g-bar compression)."""
     if mi.act_psum == "int8" and mi.tp > 1:
-        vma = set(getattr(jax.typeof(x), "vma", ()) or ())
+        vma = set(getattr(typeof(x), "vma", ()) or ())
         if "model" not in vma:
             from repro.core.act_compress import int8_bwd_psum
             return int8_bwd_psum(x, "model")
@@ -106,10 +108,10 @@ def pvary_like(x, ref):
     bodies produce device-varying values; under shard_map's VMA typing
     the carry init must be pvary'd to the body's type. No-op outside
     shard_map (avals then carry no vma)."""
-    want = set(getattr(jax.typeof(ref), "vma", ()) or ())
-    have = set(getattr(jax.typeof(x), "vma", ()) or ())
+    want = set(getattr(typeof(ref), "vma", ()) or ())
+    have = set(getattr(typeof(x), "vma", ()) or ())
     missing = tuple(want - have)
-    return jax.lax.pvary(x, missing) if missing else x
+    return pvary(x, missing) if missing else x
 
 
 def pvary_tree_like(tree, ref_tree):

@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SystemConfig
-from repro.core.fcdp import gather_param, plan_tree
+from repro.core.fcdp import gather_param
 from repro.core.partition import ParamDef
+from repro.core.strategy import get_strategy
 from repro.models import stack as stk
 from repro.models.common import MeshInfo, pad_vocab
 from repro.models.layers import chunked_tp_softmax_xent, embed_lookup, rms_norm
@@ -27,14 +28,16 @@ class EncDec:
     def __init__(self, cfg: ModelConfig, sys: SystemConfig, mesh):
         assert cfg.num_encoder_layers > 0
         self.cfg, self.sys, self.mesh = cfg, sys, mesh
+        self.strategy = get_strategy(sys.mode)
         self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum)
         self.n_enc = cfg.num_encoder_layers
         self.n_dec = cfg.num_layers
         self.plan_enc, self.plan_dec = ENC_PLAN, DEC_PLAN
         self.vpad = pad_vocab(cfg.vocab_size, self.mi.tp)
         self._defs = self._build_defs()
-        self._plans = plan_tree(self._defs, mesh, sys.mode, sys.min_shard_size,
-                                compress_bwd=(sys.grad_compress == "int8_pod"))
+        self._plans = self.strategy.plan_tree(
+            self._defs, mesh, sys.min_shard_size,
+            compress_bwd=(sys.grad_compress == "int8_pod"))
 
     def _build_defs(self):
         cfg, tp = self.cfg, self.mi.tp
@@ -60,7 +63,8 @@ class EncDec:
         x = enc_embeds.astype(jnp.dtype(self.sys.compute_dtype))
         x, _, _ = stk.apply_stack(self.cfg, self.sys, self.mi, self.plan_enc,
                                   params["enc_blocks"],
-                                  self._plans["enc_blocks"], x, ctx)
+                                  self._plans["enc_blocks"], x, ctx,
+                                  strategy=self.strategy)
         return rms_norm(x, gather_param(params["enc_norm"],
                                         self._plans["enc_norm"]),
                         self.cfg.norm_eps)
@@ -78,7 +82,8 @@ class EncDec:
                "enc_out": enc_out}
         x, _, aux = stk.apply_stack(cfg, sys, mi, self.plan_dec,
                                     params["dec_blocks"],
-                                    self._plans["dec_blocks"], x, ctx)
+                                    self._plans["dec_blocks"], x, ctx,
+                                    strategy=self.strategy)
         x = rms_norm(x, gather_param(params["final_norm"],
                                      self._plans["final_norm"]), cfg.norm_eps)
         head = gather_param(params["head"], self._plans["head"])
@@ -104,7 +109,8 @@ class EncDec:
                "enc_out": enc_out, "prefill": True}
         x, new_state, _ = stk.apply_stack(
             self.cfg, self.sys, self.mi, self.plan_dec, params["dec_blocks"],
-            self._plans["dec_blocks"], x, ctx, state)
+            self._plans["dec_blocks"], x, ctx, state,
+            strategy=self.strategy)
         x = rms_norm(x, gather_param(params["final_norm"],
                                      self._plans["final_norm"]),
                      self.cfg.norm_eps)
@@ -119,7 +125,8 @@ class EncDec:
         ctx = {"decode": True, "seq_sharded": seq_sharded}
         x, new_state, _ = stk.apply_stack(
             self.cfg, self.sys, self.mi, self.plan_dec, params["dec_blocks"],
-            self._plans["dec_blocks"], x, ctx, state)
+            self._plans["dec_blocks"], x, ctx, state,
+            strategy=self.strategy)
         x = rms_norm(x, gather_param(params["final_norm"],
                                      self._plans["final_norm"]),
                      self.cfg.norm_eps)

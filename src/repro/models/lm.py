@@ -10,8 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SystemConfig
-from repro.core.fcdp import gather_param, plan_tree
+from repro.core.fcdp import gather_param
 from repro.core.partition import ParamDef
+from repro.core.strategy import get_strategy
 from repro.models import stack as stk
 from repro.models.common import MeshInfo, pad_vocab, psum_tp
 from repro.models.layers import (chunked_tp_softmax_xent, embed_lookup,
@@ -44,12 +45,14 @@ class LM:
 
     def __init__(self, cfg: ModelConfig, sys: SystemConfig, mesh):
         self.cfg, self.sys, self.mesh = cfg, sys, mesh
+        self.strategy = get_strategy(sys.mode)
         self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum)
         self.plan, self.n_groups = layer_plan(cfg)
         self.vpad = pad_vocab(cfg.vocab_size, self.mi.tp)
         self._defs = self._build_defs()
-        self._plans = plan_tree(self._defs, mesh, sys.mode, sys.min_shard_size,
-                                compress_bwd=(sys.grad_compress == "int8_pod"))
+        self._plans = self.strategy.plan_tree(
+            self._defs, mesh, sys.min_shard_size,
+            compress_bwd=(sys.grad_compress == "int8_pod"))
 
     # -- parameters ---------------------------------------------------------
     def _build_defs(self):
@@ -90,8 +93,8 @@ class LM:
     def _segments(self):
         """(start, length, placement) segments implementing FCDP-Cache's
         device-fraction split over the layer stack."""
-        f = self.sys.device_cache_fraction
-        n_dev = int(round(f * self.n_groups)) if self.sys.mode == "fcdp" else 0
+        n_dev = self.strategy.device_cache_groups(
+            self.n_groups, self.sys.device_cache_fraction)
         segs = []
         if n_dev > 0:
             segs.append((0, n_dev, "device"))
@@ -109,7 +112,8 @@ class LM:
                        if state is not None else None)
             x, s_new, a = stk.apply_stack(
                 self.cfg, self.sys, self.mi, self.plan, p_slice,
-                self._plans["blocks"], x, ctx, s_slice, placement)
+                self._plans["blocks"], x, ctx, s_slice, placement,
+                strategy=self.strategy)
             aux = aux + a
             if s_new is not None:
                 new_state_parts.append(s_new)

@@ -5,6 +5,24 @@ FCDP gather + remat schedule.
 A "plan" is a list of positions; each position is a tuple of sublayer
 kinds. The whole group repeats `n_groups` times (params stacked on a
 leading 'stack' dim, applied with jax.lax.scan).
+
+Two scan schedules are provided:
+
+  sequential (default): each scan step gathers (stage 1 + stage 2) and
+  computes its own layer group; the strategy's remat policy decides what
+  the backward re-gathers.
+
+  layer-ahead prefetch (SystemConfig.prefetch, strategy-gated): the scan
+  carry double-buffers the stage-1 (inter/DCN) gather result, so step i
+  issues layer i+1's stage-1 all-gather -- which has no data dependency
+  on layer i's compute and overlaps with it under XLA's latency-hiding
+  scheduler -- while computing layer i from the carried cache. A no-op
+  whenever stage 1 is structurally empty (MiCS, single-pod meshes,
+  FCDP-Comm frozen layouts). Because the prefetched cache rides the scan
+  carry, the backward pass reads it back instead of re-running stage 1:
+  prefetch trades one in-flight stage-1 buffer (plus saved carries) for
+  full DCN overlap. Applied on the stateless path only (training loss /
+  encoder); serve paths keep the sequential schedule.
 """
 from __future__ import annotations
 
@@ -15,11 +33,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SystemConfig
-from repro.core.fcdp import (GatherPlan, checkpoint_layer,
-                             gather_param, gather_tree)
+from repro.core.fcdp import (checkpoint_layer, gather_param, gather_stage1,
+                             gather_stage2, gather_tree)
 from repro.core.partition import ParamDef, tree_map_defs
+from repro.core.strategy import GatherPlan, resolve_strategy
 from repro.models import sublayers as sl
 from repro.models.common import MeshInfo
+
+_is_plan = lambda x: isinstance(x, GatherPlan)  # noqa: E731
 
 KIND_DEFS = {
     "attn": sl.attn_defs,
@@ -155,13 +176,17 @@ def init_group_state(cfg, plan, mi: MeshInfo, batch_local: int,
 def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
                 plan: List[Tuple[str, ...]],
                 stacked_params, stacked_plans, x, ctx: Dict[str, Any],
-                stacked_state=None, placement: Optional[str] = None):
+                stacked_state=None, placement: Optional[str] = None,
+                strategy=None):
     """Scan the group over the stack dimension with the FCDP schedule.
 
     stacked_params: pytree with leading stack dim on every leaf.
     stacked_plans: GatherPlan tree (body-level dims, see plan_tree(stacked=True)).
+    strategy: resolved ShardingStrategy (falls back to sys.mode).
     Returns (x, new_stacked_state, aux_sum).
     """
+    strategy = resolve_strategy(strategy if strategy is not None
+                                else sys.mode)
     has_state = stacked_state is not None
 
     moe_sharded = (getattr(sys, "moe_serve_sharded", False)
@@ -169,39 +194,48 @@ def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
     if moe_sharded:
         ctx = dict(ctx, moe_sharded=True)
 
-    def group_body(x, params_slice, state_slice):
-        new_state: Dict[str, Any] = {}
-        aux = jnp.float32(0)
-        for i, kinds in enumerate(plan):
-            key = f"pos{i}"
-            pos_new = {}
-            for kind in kinds:
-                p_shard = params_slice[key][kind]
-                gplan = stacked_plans[key][kind]
-                if kind == "moe" and moe_sharded:
-                    # gather-free expert weights: pass raw shards + plans
-                    p = {k: (gather_param(v, gplan[k])
-                             if not k.startswith("we_") else v)
-                         for k, v in p_shard.items()}
-                    p["_we_plans"] = {k: gplan[k] for k in p_shard
-                                      if k.startswith("we_")}
-                else:
-                    p = gather_tree(p_shard, gplan)
-                st = (state_slice.get(key, {}).get(kind)
-                      if state_slice else None)
-                x, st_new, a = apply_sublayer(kind, cfg, sys, mi, p, x, ctx, st)
-                aux = aux + a
-                if st_new is not None and kind in STATEFUL_KINDS:
-                    pos_new[kind] = st_new
-            if pos_new:
-                new_state[key] = pos_new
-        return x, new_state, aux
+    def make_group_body(gather_leaf):
+        """Group apply; ``gather_leaf`` reconstructs one param leaf --
+        the full two-stage gather on the sequential schedule, stage 2
+        only when consuming the prefetched stage-1 cache."""
+        def group_body(x, params_slice, state_slice):
+            new_state: Dict[str, Any] = {}
+            aux = jnp.float32(0)
+            for i, kinds in enumerate(plan):
+                key = f"pos{i}"
+                pos_new = {}
+                for kind in kinds:
+                    p_shard = params_slice[key][kind]
+                    gplan = stacked_plans[key][kind]
+                    if kind == "moe" and moe_sharded:
+                        # gather-free expert weights: raw shards + plans
+                        p = {k: (gather_leaf(v, gplan[k])
+                                 if not k.startswith("we_") else v)
+                             for k, v in p_shard.items()}
+                        p["_we_plans"] = {k: gplan[k] for k in p_shard
+                                          if k.startswith("we_")}
+                    else:
+                        p = jax.tree.map(gather_leaf, p_shard, gplan,
+                                         is_leaf=_is_plan)
+                    st = (state_slice.get(key, {}).get(kind)
+                          if state_slice else None)
+                    x, st_new, a = apply_sublayer(kind, cfg, sys, mi, p, x,
+                                                  ctx, st)
+                    aux = aux + a
+                    if st_new is not None and kind in STATEFUL_KINDS:
+                        pos_new[kind] = st_new
+                if pos_new:
+                    new_state[key] = pos_new
+            return x, new_state, aux
+        return group_body
 
-    wrapped = checkpoint_layer(
-        group_body, sys.mode, sys.activation_policy, sys.host_offload,
-        placement=placement)
+    def wrap(body):
+        return checkpoint_layer(body, strategy, sys.activation_policy,
+                                sys.host_offload, placement=placement)
 
     if has_state:
+        wrapped = wrap(make_group_body(gather_param))
+
         def body(carry, inp):
             x, = carry
             params_slice, state_slice = inp
@@ -210,12 +244,44 @@ def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
         (x,), (new_states, auxs) = jax.lax.scan(
             body, (x,), (stacked_params, stacked_state))
         return x, new_states, jnp.sum(auxs)
-    else:
+
+    from repro.models.common import pvary_like
+    aux0 = pvary_like(jnp.float32(0), x)
+
+    plan_leaves = jax.tree.leaves(stacked_plans, is_leaf=_is_plan)
+    prefetch_on = (strategy.prefetch_active(sys, mi)
+                   and any(p.prefetchable for p in plan_leaves
+                           if _is_plan(p)))
+
+    if not prefetch_on:
+        wrapped = wrap(make_group_body(gather_param))
+
         def body(carry, params_slice):
             x, aux = carry
             x, _, a = wrapped(x, params_slice, None)
             return (x, aux + a), None
-        from repro.models.common import pvary_like
-        aux0 = pvary_like(jnp.float32(0), x)
         (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked_params)
         return x, None, aux
+
+    # -- layer-ahead prefetch schedule (double-buffered stage-1 cache) ----
+    wrapped = wrap(make_group_body(gather_stage2))
+
+    def stage1_slice(params_slice):
+        return jax.tree.map(gather_stage1, params_slice, stacked_plans,
+                            is_leaf=_is_plan)
+
+    first = jax.tree.map(lambda a: a[0], stacked_params)
+    rest = jax.tree.map(lambda a: a[1:], stacked_params)
+    cache0 = stage1_slice(first)
+
+    def body(carry, slice_next):
+        x, aux, cache = carry
+        # issue layer i+1's stage-1 (DCN) gather: independent of layer
+        # i's compute below, so the scheduler can overlap the two
+        cache_next = stage1_slice(slice_next)
+        x, _, a = wrapped(x, cache, None)
+        return (x, aux + a, cache_next), None
+
+    (x, aux, cache_last), _ = jax.lax.scan(body, (x, aux0, cache0), rest)
+    x, _, a = wrapped(x, cache_last, None)
+    return x, None, aux + a

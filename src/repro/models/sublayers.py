@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from jax._src.lax.parallel import all_gather_invariant
+from repro.compat import all_gather_invariant
 
 from repro.configs.base import ModelConfig, SystemConfig
 from repro.core.partition import ParamDef

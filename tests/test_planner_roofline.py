@@ -27,15 +27,37 @@ def test_memory_planner_tau_search(mesh3):
     planner = MemoryPlanner(hbm_budget=1 << 40)
     plan = planner.plan(run, mesh3, fractions=(1.0, 0.0))
     assert plan.fits and plan.device_fraction == 1.0
-    # impossible budget: the planner walks every fraction and reports
-    # the ZeRO-3-equivalent floor without fitting
+    # impossible budget: the planner walks every fraction, then tries the
+    # block_io activation-remat fallback, and reports the
+    # ZeRO-3-equivalent floor without fitting
     planner2 = MemoryPlanner(hbm_budget=1)
     plan2 = planner2.plan(run, mesh3, fractions=(1.0, 0.0))
     assert not plan2.fits and plan2.device_fraction == 0.0
-    assert len(plan2.iterations) == 2
+    assert len(plan2.iterations) == 3
+    assert plan2.iterations[-1]["activation_policy"] == "block_io"
+    assert plan2.iterations[0]["activation_policy"] == "save_all"
     # device-cache fraction must not change peak by more than the cache
     peaks = [it["peak_bytes"] for it in plan2.iterations]
     assert peaks[0] >= peaks[1]  # demoting to host frees HBM (CPU: >=)
+
+
+def test_memory_planner_block_io_fallback_fits(mesh3):
+    """A budget between the save_all and block_io peaks must be rescued
+    by the activation-remat fallback rather than declared regather-only."""
+    from repro.core.cache import MemoryPlanner
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8),
+                    optimizer=OptimizerConfig(total_steps=4, warmup_steps=1))
+    probe = MemoryPlanner(hbm_budget=1).plan(run, mesh3, fractions=(0.0,))
+    save_all_peak = probe.iterations[0]["peak_bytes"]
+    block_io_peak = probe.iterations[-1]["peak_bytes"]
+    assert block_io_peak < save_all_peak  # remat must actually free HBM
+    budget = (block_io_peak + save_all_peak) // 2
+    plan = MemoryPlanner(hbm_budget=budget).plan(run, mesh3,
+                                                 fractions=(0.0,))
+    assert plan.fits
+    assert plan.activation_policy == "block_io"
+    assert plan.device_fraction == 0.0
 
 
 def test_host_cache_accounting(mesh3, mesh2):
