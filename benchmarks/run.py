@@ -39,10 +39,13 @@ def bench_comm_smoke(rows):
     """--smoke fast path: a toy (2,2,2) mesh per system mode, walking the
     same collect_collectives/roofline_report pipeline the full comm bench
     uses -- keeps the BENCH_*.json schema honest without the 512-device
-    compile. Also exercises the prefetch overlap row."""
+    compile. Sweeps the streaming gather scheduler's prefetch_depth
+    (0/1/2) so the depth gating of the overlap credit and the per-depth
+    in-flight ring-buffer accounting stay exercised in CI."""
     import jax
     from repro.configs.base import (ModelConfig, RunConfig, ShapeCell,
                                     SystemConfig)
+    from repro.core.cache import cache_bytes_per_chip
     from repro.core.engine import StepBundle
     from repro.core.strategy import strategy_names
     from repro.launch.mesh import make_mesh
@@ -56,38 +59,66 @@ def bench_comm_smoke(rows):
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     out = []
     for mode in strategy_names():
-        for prefetch in (False, True):
+        for depth in (0, 1, 2):
             sysc = SystemConfig(mode=mode, min_shard_size=8,
-                                prefetch=prefetch)
+                                prefetch_depth=depth)
             b = StepBundle(RunConfig(model=cfg, shape=cell, system=sysc),
                            mesh)
             closed = b.make_train_step().trace(*b.train_input_sds()).jaxpr
             sizes = {a: b.mi.size(a) for a in b.mi.axis_names}
             stats = collect_collectives(closed, sizes)
             flops, nbytes = flops_bytes_from_jaxpr(closed, 8)
-            live = b.strategy.prefetch_active(sysc, mesh)
-            rep = roofline_report(flops, nbytes, stats, cfg, cell, 8,
-                                  prefetch=live)
+            acct = cache_bytes_per_chip(b)
+            live = acct["prefetch_depth"]
+            rep = roofline_report(
+                flops, nbytes, stats, cfg, cell, 8, prefetch=live,
+                inflight_bytes=acct["prefetch_buffer_bytes_per_chip"])
             # schema the full benches / EXPERIMENTS tables consume
             for key in ("compute_s", "memory_s", "collective_s", "ici_s",
                         "dcn_s", "dominant", "prefetch", "coll_by_op",
                         "dcn_bytes_per_chip", "ici_bytes_per_chip"):
                 assert key in rep, f"roofline schema missing {key}"
-            out.append({"system": mode, "prefetch": prefetch,
-                        "prefetch_live": live,
+            for key in ("depth", "inflight_stage1_bytes_per_chip",
+                        "overlapped_dcn_bytes_per_chip", "overlapped_s",
+                        "collective_exposed_s"):
+                assert key in rep["prefetch"], \
+                    f"prefetch schema missing {key}"
+            out.append({"system": mode, "prefetch_depth": depth,
+                        "depth_live": live,
                         "dcn_bytes": rep["dcn_bytes_per_chip"],
+                        "inflight_stage1_bytes":
+                            acct["prefetch_buffer_bytes_per_chip"],
                         "overlapped_dcn_bytes":
                             rep["prefetch"]["overlapped_dcn_bytes_per_chip"],
+                        "overlapped_s": rep["prefetch"]["overlapped_s"],
                         "collective_exposed_s":
                             rep["prefetch"]["collective_exposed_s"]})
-            rows.append((f"smoke/{mode}{'_pf' if prefetch else ''}_dcn_MB",
+            rows.append((f"smoke/{mode}_d{depth}_dcn_MB",
                          0, rep["dcn_bytes_per_chip"] / 1e6))
+            rows.append((f"smoke/{mode}_d{depth}_overlap_us",
+                         0, rep["prefetch"]["overlapped_s"] * 1e6))
     # invariants the acceptance gates rely on
-    by = {(o["system"], o["prefetch"]): o for o in out}
-    assert by[("fcdp", True)]["overlapped_dcn_bytes"] > 0
-    assert by[("zero3", True)]["overlapped_dcn_bytes"] > 0
-    assert by[("mics", True)]["overlapped_dcn_bytes"] == 0
-    assert not by[("mics", True)]["prefetch_live"]
+    by = {(o["system"], o["prefetch_depth"]): o for o in out}
+    for mode in ("fcdp", "zero3", "zeropp"):
+        assert by[(mode, 1)]["overlapped_dcn_bytes"] > 0
+        # fcdp/zeropp backwards already re-run stage 2 only, so prefetch
+        # moves bytes earlier without adding or removing any; zero3's
+        # carried cache additionally retires its backward stage-1
+        # re-gather, so its DCN volume may only shrink
+        if mode == "zero3":
+            assert by[(mode, 1)]["dcn_bytes"] <= by[(mode, 0)]["dcn_bytes"]
+        else:
+            assert abs(by[(mode, 2)]["dcn_bytes"]
+                       - by[(mode, 0)]["dcn_bytes"]) < 1e-6 * max(
+                           by[(mode, 0)]["dcn_bytes"], 1.0)
+        # deeper ring: weakly more overlap credit, k x buffer bytes
+        assert (by[(mode, 2)]["overlapped_s"]
+                >= by[(mode, 1)]["overlapped_s"])
+        assert (by[(mode, 2)]["inflight_stage1_bytes"]
+                == 2 * by[(mode, 1)]["inflight_stage1_bytes"] > 0)
+    for mode in ("mics", "hier"):
+        assert by[(mode, 1)]["overlapped_dcn_bytes"] == 0
+        assert by[(mode, 1)]["depth_live"] == 0
     return {"smoke": True, "rows": out}
 
 

@@ -80,14 +80,55 @@ except ImportError:  # pre-VMA JAX: the varying gather is the only gather
     _agi = None
     HAS_INVARIANT_GATHER = False
 
+# Pre-VMA replication typing for the invariant gather. 0.4.x shard_map
+# registers all_gather as a "standard collective" (varying -> varying),
+# so an all-gather can never DISCHARGE a replication obligation -- e.g.
+# the hier strategy's post-update pod-axis gather of optimizer shards
+# back to the pod-replicated param layout fails the out_specs rep check
+# even though the gathered value is replicated by construction. The real
+# invariant gather types this correctly on VMA JAX; here we recover it
+# with a no-op pass-through primitive whose check/rewrite rules add the
+# gathered axes to the replication set (semantically exact: every member
+# of the gathered axis holds the identical concatenated result).
+_rep_assert_p = None
+if not HAS_VMA and _agi is None:
+    try:
+        from jax.experimental import shard_map as _shmap_mod2
+        from jax.interpreters import ad as _ad, mlir as _mlir
+
+        _rep_assert_p = jax.core.Primitive("rep_assert")
+        _rep_assert_p.def_impl(lambda x, *, axes: x)
+        _rep_assert_p.def_abstract_eval(lambda x, *, axes: x)
+        _mlir.register_lowering(
+            _rep_assert_p, lambda ctx, x, *, axes: [x])
+        _ad.deflinear2(_rep_assert_p, lambda ct, x, *, axes: (ct,))
+
+        @_shmap_mod2.register_check(_rep_assert_p)
+        def _rep_assert_check(mesh, x_rep, *, axes):
+            return x_rep | set(axes) if x_rep is not None else x_rep
+
+        @_shmap_mod2.register_rewrite(_rep_assert_p)
+        def _rep_assert_rewrite(mesh, in_reps, x, *, axes):
+            (x_rep,) = in_reps
+            out_rep = x_rep | set(axes) if x_rep is not None else x_rep
+            return [_rep_assert_p.bind(x, axes=axes)], [out_rep]
+    except Exception:  # pragma: no cover - registry moved/renamed
+        _rep_assert_p = None
+
 
 def all_gather_invariant(x, axis_name, *, axis: int = 0, tiled: bool = False):
     """Invariant (replicated-typed) all-gather, or the plain all-gather on
-    JAX versions without it. One axis name per call (matching the real
-    invariant gather's signature)."""
+    JAX versions without it (typed replicated via the rep_assert shim
+    when the 0.4.x registries are available). One axis name per call
+    (matching the real invariant gather's signature)."""
     if _agi is not None:
         return _agi(x, axis_name, axis=axis, tiled=tiled)
-    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+    y = jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+    if _rep_assert_p is not None:
+        axes = (axis_name,) if isinstance(axis_name, str) \
+            else tuple(axis_name)
+        y = _rep_assert_p.bind(y, axes=axes)
+    return y
 
 
 # ---------------------------------------------------------------------------

@@ -105,6 +105,11 @@ def shape_cell(name: str) -> ShapeCell:
     raise KeyError(f"unknown shape cell {name!r}; have {[c.name for c in SHAPE_CELLS]}")
 
 
+# remat/activation policies understood by core/fcdp.py:make_remat_policy
+ACTIVATION_POLICIES = ("save_all", "block_io", "offload_acts",
+                       "save_collectives")
+
+
 @dataclass(frozen=True)
 class SystemConfig:
     """Which distributed-training system and caching policy to use.
@@ -114,19 +119,46 @@ class SystemConfig:
       zeropp  - device-cached intra shard, intra-only bwd AG   (ZeRO++ analog)
       fcdp    - host-cached intra shard, intra-only bwd AG     (the paper)
       mics    - subgroup (pod-local) sharding, no cross-pod AG (MiCS analog)
+      hier    - pod-local param sharding, optimizer state sharded over
+                ('pod','data') (hierarchical partitioning, Xu et al.)
+
+    Validated at construction: device_cache_fraction must lie in [0, 1],
+    activation_policy must be a known policy, and prefetch_depth must be
+    a non-negative int (None derives it from the legacy `prefetch`
+    bool). `mode` itself is validated at strategy resolution.
     """
     mode: str = "fcdp"
     # FCDP-Cache: fraction of layers allowed to keep the cached shard on
     # device (planner output; tau in the paper). 0.0 -> all host, 1.0 -> all device.
     device_cache_fraction: float = 0.0
-    # layer-ahead prefetch: issue layer i+1's stage-1 (inter/DCN)
-    # all-gather concurrently with layer i's compute (strategy-gated:
-    # a no-op for MiCS / frozen / single-pod paths where stage 1 is
-    # empty). Trades one in-flight stage-1 buffer -- carried across the
-    # layer scan, so the backward reads it instead of re-gathering --
-    # for full DCN overlap. Off by default: the sequential schedule is
-    # the paper-faithful baseline the mode comparisons are defined on.
-    prefetch: bool = False
+    # Streaming gather scheduler (core/schedule.py): depth of the ring
+    # buffer of in-flight stage-1 (inter/DCN) gather caches. Step i
+    # issues layer i+k's stage-1 all-gather -- no data dependency on
+    # layer i's compute, so XLA's latency-hiding scheduler overlaps the
+    # DCN transfer -- while computing layer i from the oldest ring slot.
+    # 0 = sequential schedule (the paper-faithful baseline the mode
+    # comparisons are defined on); k trades k in-flight stage-1 buffers
+    # (carried across the layer scan, so the backward reads them back
+    # instead of re-gathering) for up to k layers' worth of DCN overlap.
+    # Strategy-gated: a no-op for MiCS/hier / frozen / single-pod paths
+    # where stage 1 is structurally empty. None -> derived from the
+    # legacy `prefetch` bool (True -> 1).
+    prefetch_depth: Optional[int] = None
+    # legacy alias: an init-only bool (True -> depth 1, False -> depth
+    # 0). Because it is an InitVar, dataclasses.replace() never carries
+    # it over, so a non-None value here was ALWAYS passed explicitly in
+    # this construction and wins over a (possibly replace-carried)
+    # prefetch_depth. Old readers keep working through the read-only
+    # `prefetch` property (== prefetch_depth > 0) installed below.
+    prefetch: dataclasses.InitVar[Optional[bool]] = None
+    # second scheduler stream (engine/train.py): on the gradient-
+    # accumulation path, hold microbatch i's stage-1-level gradients for
+    # one iteration and run their pod-axis reduce-scatter concurrently
+    # with microbatch i+1's forward instead of serializing it inside the
+    # backward. Trades one in-flight stage-1-sized gradient buffer for
+    # DCN overlap; total reduce volume is unchanged. Strategy-gated
+    # (needs a non-empty stage 1; MiCS/hier decline).
+    async_grad_reduce: bool = False
     host_offload: bool = True          # False -> Saveable instead of Offloadable
     # FCDP-Comm / PEFT
     peft: bool = False
@@ -168,8 +200,40 @@ class SystemConfig:
     # weights per layer for a handful of tokens
     moe_serve_sharded: bool = False
 
+    def __post_init__(self, prefetch):
+        if not 0.0 <= self.device_cache_fraction <= 1.0:
+            raise ValueError(
+                "device_cache_fraction must be in [0, 1], got "
+                f"{self.device_cache_fraction!r}")
+        if self.activation_policy not in ACTIVATION_POLICIES:
+            raise ValueError(
+                f"unknown activation_policy {self.activation_policy!r}; "
+                f"known: {sorted(ACTIVATION_POLICIES)}")
+        depth = self.prefetch_depth
+        if depth is None:                    # legacy bool shim
+            depth = 1 if prefetch else 0
+        elif prefetch is not None:
+            # an explicit legacy bool wins over a carried depth:
+            # replace(prefetch=False) must actually disable the schedule
+            depth = (depth or 1) if prefetch else 0
+        if not isinstance(depth, int) or isinstance(depth, bool) \
+                or depth < 0:
+            raise ValueError(
+                f"prefetch_depth must be a non-negative int, got {depth!r}")
+        object.__setattr__(self, "prefetch_depth", depth)
+
     def replace(self, **kw) -> "SystemConfig":
+        # dataclasses.replace re-derives unspecified InitVars via
+        # getattr, which would read the `prefetch` property and smuggle
+        # the OLD on/off state back in (overriding e.g. an explicit
+        # prefetch_depth=0). Pin it to None unless the caller passes it.
+        kw.setdefault("prefetch", None)
         return dataclasses.replace(self, **kw)
+
+
+# legacy read-only view of the scheduler knob (the InitVar above holds
+# this class-attribute slot until we overwrite it post-decoration)
+SystemConfig.prefetch = property(lambda self: self.prefetch_depth > 0)
 
 
 @dataclass(frozen=True)

@@ -2,12 +2,14 @@
 
 XLA has no runtime allocator to poll, so the paper's "monitor GPU memory
 pressure, cache on-device when below tau" becomes a compile-time search:
-start from the fastest placement (device cache for every layer group),
-compile, read memory_analysis(), and demote groups device -> host ->
-regather until the step fits tau * HBM. If even device_fraction=0.0 does
-not fit, the planner tries full activation remat (block_io) before
-declaring regather-only; worst case is exactly ZeRO-3 -- the paper's
-safety guarantee as a static property.
+start from the fastest configuration (device cache for every layer
+group, the configured prefetch depth), compile, read memory_analysis(),
+and demote until the step fits tau * HBM -- prefetch depth FIRST (each
+demotion frees one in-flight stage-1 ring buffer and costs only overlap,
+not placement), then layer groups device -> host -> regather. If even
+(depth=0, device_fraction=0.0) does not fit, the planner tries full
+activation remat (block_io) before declaring regather-only; worst case
+is exactly ZeRO-3 -- the paper's safety guarantee as a static property.
 
 Also provides the host-DRAM budget accounting (the paper's "~2W bytes of
 host memory per node"): on the CPU backend pinned_host placements are
@@ -21,7 +23,10 @@ from typing import Dict, List, Optional
 
 import jax
 
-from repro.core.strategy import GatherPlan
+from repro.core.schedule import (GatherScheduler, async_buffer_bytes,
+                                 async_reduce_enabled,
+                                 prefetch_buffer_bytes)
+from repro.core.strategy import GatherPlan, resolve_strategy
 
 HBM_PER_CHIP = 16 * 2**30          # v5e
 
@@ -33,19 +38,35 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
     param_bytes / (data*tp) per chip -- summed = W_bf16/(data*tp)*layers'
     worth = W/(pod-degree) per pod total, the paper's 'W per node'.
     cache_after=2 (single-pod): the fully gathered TP-local weight.
+
+    Also reports the streaming gather scheduler's in-flight stage-1 ring
+    buffers (k x one layer group's stage-1 bytes) and, when the async
+    grad-reduce stream is live for this run, its resident stage-1
+    buffers (the leaf-level gathered param view + the carried gradient
+    buffer) -- all HBM-resident, so the planner counts them against the
+    tau budget.
     """
     mi = bundle.mi
     strategy = bundle.strategy
-    plans = jax.tree.leaves(
-        bundle.model.plans,
-        is_leaf=lambda x: isinstance(x, GatherPlan))
+    plans = bundle.plan_leaves
     defs = bundle.def_leaves
     host = 0.0
     for d, p in zip(defs, plans):
         if not isinstance(p, GatherPlan):
             continue
         host += strategy.cached_bytes_for(d, p, mi)
-    return {"host_cache_bytes_per_chip": host}
+    # the depth the scheduler actually resolves for this bundle (0 when
+    # no plan has a non-empty stage 1, e.g. serve_frozen fcdp layouts)
+    depth = GatherScheduler(strategy, bundle.run.system, mi,
+                            bundle.model.plans).depth
+    async_bytes = (async_buffer_bytes(strategy, defs, plans, mi)
+                   if async_reduce_enabled(bundle.run, strategy, mi)
+                   else 0.0)
+    return {"host_cache_bytes_per_chip": host,
+            "prefetch_depth": depth,
+            "prefetch_buffer_bytes_per_chip": prefetch_buffer_bytes(
+                strategy, defs, plans, mi, depth),
+            "async_buffer_bytes_per_chip": async_bytes}
 
 
 @dataclass
@@ -60,10 +81,13 @@ class CachePlan:
     # activation policy the winning configuration ran with -- differs
     # from the run's own policy only when the block_io fallback fired
     activation_policy: str = "save_all"
+    # prefetch depth the winning configuration ran with -- may be lower
+    # than the run's own depth when ring buffers were demoted to fit
+    prefetch_depth: int = 0
 
 
 class MemoryPlanner:
-    """Iterative tau search over the device-cache fraction."""
+    """Iterative tau search over (prefetch depth, device-cache fraction)."""
 
     def __init__(self, hbm_budget: int = HBM_PER_CHIP,
                  host_budget: Optional[int] = None):
@@ -81,10 +105,15 @@ class MemoryPlanner:
         from repro.core.engine import StepBundle
         bundle = StepBundle(run.replace(system=sysc), mesh)
         peak = self._peak(bundle)
-        host = cache_bytes_per_chip(bundle)["host_cache_bytes_per_chip"]
+        acct = cache_bytes_per_chip(bundle)
         it = {"device_fraction": sysc.device_cache_fraction,
               "activation_policy": sysc.activation_policy,
-              "peak_bytes": peak, "host_bytes": host}
+              "prefetch_depth": acct["prefetch_depth"],
+              "prefetch_buffer_bytes": acct[
+                  "prefetch_buffer_bytes_per_chip"],
+              "async_buffer_bytes": acct["async_buffer_bytes_per_chip"],
+              "peak_bytes": peak, "host_bytes": acct[
+                  "host_cache_bytes_per_chip"]}
         iters.append(it)
         return it
 
@@ -93,20 +122,30 @@ class MemoryPlanner:
                 and (self.host is None or it["host_bytes"] <= self.host))
 
     def plan(self, run, mesh, fractions=(1.0, 0.5, 0.25, 0.0)) -> CachePlan:
-        """Try device-cache fractions high->low; after 0.0, fall back to
-        activation remat (block_io), then declare regather-only."""
+        """Demote until the step fits: prefetch depth first (k -> 0 at
+        the fastest device fraction -- each step frees one in-flight
+        stage-1 ring buffer and costs only overlap), then device-cache
+        fractions high -> low, then the activation-remat (block_io)
+        fallback, then declare regather-only."""
+        k0 = resolve_strategy(run.system.mode).prefetch_depth(
+            run.system, mesh)
+        attempts = ([(fractions[0], d) for d in range(k0, 0, -1)]
+                    + [(f, 0) for f in fractions])
         iters: List[Dict] = []
-        for frac in fractions:
-            sysc = run.system.replace(device_cache_fraction=frac)
+        for frac, depth in attempts:
+            sysc = run.system.replace(device_cache_fraction=frac,
+                                      prefetch_depth=depth)
             it = self._attempt(run, mesh, sysc, iters)
             if self._fits(it):
                 return CachePlan(frac, True, it["peak_bytes"],
                                  it["host_bytes"], iters,
-                                 activation_policy=sysc.activation_policy)
+                                 activation_policy=sysc.activation_policy,
+                                 prefetch_depth=it["prefetch_depth"])
         # device cache fully demoted and still over budget: trade compute
         # for memory with full activation remat before giving up
         if run.system.activation_policy != "block_io":
             sysc = run.system.replace(device_cache_fraction=0.0,
+                                      prefetch_depth=0,
                                       activation_policy="block_io")
             it = self._attempt(run, mesh, sysc, iters)
             if self._fits(it):

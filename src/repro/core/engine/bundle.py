@@ -5,7 +5,6 @@ bodies live in engine/train.py and engine/serve.py.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Tuple
 
 import jax
@@ -15,7 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import RunConfig, ShapeCell
 from repro.core import peft as peft_mod
 from repro.core.partition import is_def, init_params, label_tree
-from repro.core.strategy import get_strategy, spec_axes
+from repro.core.strategy import GatherPlan, get_strategy, spec_axes
 from repro.models.common import MeshInfo
 from repro.models.registry import build_model
 
@@ -56,14 +55,18 @@ class StepBundle:
         self.leaf_specs = [
             self.strategy.storage_spec(d, mesh, sys.min_shard_size)
             for d in self.def_leaves]
-        # ZeRO-2-for-experts: 'inter_only' (weight-resident) tensors keep
-        # their PARAMS pod-sharded but their OPTIMIZER state fully sharded;
-        # gradients are reduce-scattered over the intra axes before the
-        # update and the updated shard is gathered back once per step.
+        # GatherPlan per leaf, aligned with def_leaves (same treedef)
+        self.plan_leaves = jax.tree.leaves(
+            self.model.plans, is_leaf=lambda x: isinstance(x, GatherPlan))
+        # Optimizer-state layout may be wider than the param layout:
+        # ZeRO-2-for-experts keeps 'inter_only' (weight-resident) params
+        # pod-sharded with fully sharded opt state, and the hier strategy
+        # shards opt state over ('pod','data') while params stay
+        # intra-pod. engine/train.py reduce-scatters grads over the
+        # widening axes before the update and gathers the updated shard
+        # back once per step.
         self.full_specs = [
-            self.strategy.storage_spec(
-                dataclasses.replace(d, fsdp_scope="full"), mesh,
-                sys.min_shard_size)
+            self.strategy.opt_spec(d, mesh, sys.min_shard_size)
             for d in self.def_leaves]
         self.rep_factors = [self._replication(s) for s in self.full_specs]
 

@@ -2,6 +2,26 @@
 (reduce-scatter via gather transposes), and optimizer application on
 ZeRO shards. Consumes a StepBundle whose strategy already fixed the
 storage layout and gather schedule.
+
+Two gradient-reduce schedules exist on the accumulation path:
+
+  sequential (default): each microbatch's backward contains the full
+  gather transposes, so the pod-axis reduce-scatter serializes after
+  every backward.
+
+  async (SystemConfig.async_grad_reduce, strategy-gated): the scheduler's
+  second stream. Each microbatch is differentiated with respect to the
+  STAGE-1-GATHERED parameter view (core/schedule.py:
+  stage1_resident_plans), so its backward stops at stage-1-level
+  gradients with intra-pod reduces only; the pod-axis reduce-scatter of
+  microbatch i then runs at the top of iteration i+1, where it has no
+  data dependency on microbatch i+1's forward and overlaps with it.
+  Memory trade: the stage-1-gathered param view is materialized at leaf
+  level for the whole model (instead of per layer inside the scan) and
+  one stage-1-sized gradient buffer rides the scan carry --
+  core/schedule.py:async_buffer_bytes is the analytic per-chip cost,
+  surfaced through core/cache.py. Per-step DCN volume is unchanged (the
+  reduce moves, it is not added).
 """
 from __future__ import annotations
 
@@ -10,16 +30,30 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import HAS_VMA, all_gather_invariant, shard_map
+from repro.core import schedule as sched
 from repro.core.strategy import spec_axes
-from repro.launch.mesh import intra_fsdp_axes
 from repro.optim.adamw import adamw_update, clip_by_global_norm
+
+
+def _entry_axes(spec: P, dim) -> tuple:
+    """Mesh axes a PartitionSpec shards dimension ``dim`` over."""
+    if dim is None or dim >= len(spec):
+        return ()
+    e = spec[dim]
+    if e is None:
+        return ()
+    return tuple(e) if isinstance(e, (tuple, list)) else (e,)
 
 
 def build_train_step(bundle):
     run, mesh, mi = bundle.run, bundle.mesh, bundle.mi
     sys, opt_cfg = run.system, run.optimizer
+    strategy = bundle.strategy
     model = bundle.model
     train_defs = [bundle.def_leaves[i] for i in bundle.train_idx]
+    train_plans = [bundle.plan_leaves[i] for i in bundle.train_idx]
+    frozen_defs = [bundle.def_leaves[i] for i in bundle.frozen_idx]
+    frozen_plans = [bundle.plan_leaves[i] for i in bundle.frozen_idx]
     train_reps = [bundle.rep_factors[i] for i in bundle.train_idx]
     wd_mask = [len(d.shape) >= 2 and "_lora_" not in d.label
                for d in train_defs]
@@ -27,42 +61,53 @@ def build_train_step(bundle):
     tp_present = mi.tp > 1
     cell = run.shape
     bspecs = bundle.batch_spec(cell)
-    intra = intra_fsdp_axes(mesh)
-    # ZeRO-2 (weight-resident) leaves: params pod-sharded, opt fully
-    # sharded; grads get an extra intra-axis reduce-scatter, updated
-    # shards get one intra all-gather per step.
-    zero2 = [j for j, i in enumerate(bundle.train_idx)
-             if (bundle.leaf_specs[i] != bundle.full_specs[i]
-                 and bundle.def_leaves[i].fsdp_scope == "inter_only")]
-    z2_dims = {j: train_defs[j].fsdp_dim for j in zero2}
+    # Optimizer state wider than param storage (ZeRO-2-for-experts,
+    # hier's ('pod','data') opt sharding): grads get a reduce-scatter
+    # over the widening axes before the update, updated shards get one
+    # all-gather back per step.
+    widen = {}
+    for j, i in enumerate(bundle.train_idx):
+        d = bundle.def_leaves[i]
+        extra = tuple(
+            a for a in _entry_axes(bundle.full_specs[i], d.fsdp_dim)
+            if a not in _entry_axes(bundle.leaf_specs[i], d.fsdp_dim))
+        if extra:
+            widen[j] = (d.fsdp_dim, extra)
 
     # Pre-VMA JAX: shard_map's AD does not auto-insert the cross-axis
     # reductions for grads of params stored REPLICATED over some mesh
-    # axes (pod-replicated MiCS/frozen layouts, model-replicated kv/norm
-    # weights, min_shard_size-replicated tensors) -- each device would
-    # keep only its local partial. Current JAX's varying-mesh-axis type
-    # system inserts these psums automatically (transpose of the
+    # axes (pod-replicated MiCS/hier/frozen layouts, model-replicated
+    # kv/norm weights, min_shard_size-replicated tensors) -- each device
+    # would keep only its local partial. Current JAX's varying-mesh-axis
+    # type system inserts these psums automatically (transpose of the
     # implicit pvary), so the explicit sum is gated on HAS_VMA. The
     # gather transposes already reduce over the axes present in the
-    # storage spec; zero2 leaves' intra sum is handled by rs_intra.
+    # storage spec; widened leaves' sum over the widening axes is
+    # handled by the rs_widen reduce-scatter instead.
     grad_sync = {}
     if not HAS_VMA:
         for j, i in enumerate(bundle.train_idx):
-            if j in z2_dims:
-                continue
+            waxes = widen.get(j, (None, ()))[1]
             missing = tuple(a for a in mi.axis_names
-                            if a not in spec_axes(bundle.leaf_specs[i]))
+                            if a not in spec_axes(bundle.leaf_specs[i])
+                            and a not in waxes)
             if missing:
                 grad_sync[j] = missing
 
-    def rs_intra(g, dim):
-        return jax.lax.psum_scatter(g, intra, scatter_dimension=dim,
+    def rs_widen(g, dim, axes):
+        return jax.lax.psum_scatter(g, axes, scatter_dimension=dim,
                                     tiled=True)
 
-    def ag_intra(p_, dim):
-        for a in intra:
+    def ag_widen(p_, dim, axes):
+        for a in reversed(axes):   # invert the tiled multi-axis scatter
             p_ = all_gather_invariant(p_, a, axis=dim, tiled=True)
         return p_
+
+    # -- async pod-axis gradient-reduce stream (scheduler stream 2) ---------
+    use_async = sched.async_reduce_enabled(run, strategy, mi)
+    if use_async:
+        g1_model = model.with_plans(
+            sched.stage1_resident_plans(model.plans))
 
     def step_body(train_params, frozen_params, opt_state, batch):
         def loss_fn(train_params):
@@ -81,19 +126,6 @@ def build_train_step(bundle):
             def mb_slice(x, i):
                 b = x.shape[0] // nm
                 return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
-            def acc_body(carry, i):
-                g_acc, ce_acc = carry
-                mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
-                def mb_loss(tp_):
-                    params = bundle.merge(tp_, frozen_params)
-                    ls, c, a = model.loss_fn(params, mb)
-                    ls = jax.lax.psum(ls, dp_axes) if dp_axes else ls
-                    c = jax.lax.psum(c, dp_axes) if dp_axes else c
-                    a = jax.lax.psum(a, dp_axes) if dp_axes else a
-                    return ls / jnp.maximum(c, 1.0) + a / jnp.maximum(c, 1.0), ls / jnp.maximum(c, 1.0)
-                (l, ce), g = jax.value_and_grad(mb_loss, has_aux=True)(train_params)
-                g_acc = jax.tree.map(jnp.add, g_acc, g)
-                return (g_acc, ce_acc + ce), None
             from repro.models.common import pvary_like
             g0 = jax.tree.map(
                 lambda p_: pvary_like(jnp.zeros_like(p_), p_),
@@ -104,8 +136,78 @@ def build_train_step(bundle):
             # axis after the loss psums), and a bare constant carries no
             # replication type on pre-VMA JAX
             ce0 = (opt_state["step"] * 0).astype(jnp.float32)
-            (grads, ce_sum), _ = jax.lax.scan(
-                acc_body, (g0, ce0), jnp.arange(nm))
+
+            def mb_loss_of(params_builder, mdl):
+                def mb_loss(tp_, mb):
+                    params = params_builder(tp_)
+                    ls, c, a = mdl.loss_fn(params, mb)
+                    ls = jax.lax.psum(ls, dp_axes) if dp_axes else ls
+                    c = jax.lax.psum(c, dp_axes) if dp_axes else c
+                    a = jax.lax.psum(a, dp_axes) if dp_axes else a
+                    ce = ls / jnp.maximum(c, 1.0)
+                    return ce + a / jnp.maximum(c, 1.0), ce
+                return mb_loss
+
+            if use_async:
+                # microbatch i's pod-axis reduce-scatter runs at the top
+                # of iteration i+1, concurrently with that iteration's
+                # forward: differentiate w.r.t. the stage-1-gathered
+                # param view so the backward stops at stage-1-level
+                # grads (intra reduces only), and carry them one step.
+                # Microbatch 0 is peeled so exactly nm reduce-scatters
+                # run per step (same DCN volume as the sequential path).
+                def g1_of(leaves, defs_, plans_):
+                    return [sched.leaf_stage1(w, d, p)
+                            for w, d, p in zip(leaves, defs_, plans_)]
+
+                def pod_reduce(pending):
+                    return [sched.leaf_stage1_reduce(g, d, p)
+                            for g, d, p in zip(pending, train_defs,
+                                               train_plans)]
+
+                mb_loss = mb_loss_of(
+                    lambda tp_: bundle.merge(
+                        tp_, g1_of(frozen_params, frozen_defs,
+                                   frozen_plans)), g1_model)
+
+                def mb_grads(i):
+                    mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                    g1_tp = g1_of(train_params, train_defs, train_plans)
+                    return jax.value_and_grad(
+                        mb_loss, has_aux=True)(g1_tp, mb)
+
+                def acc_body(carry, i):
+                    g_acc, pending, ce_acc = carry
+                    # stream 2: fold the PREVIOUS microbatch's stage-1
+                    # grads down to storage shards -- a pure DCN
+                    # reduce-scatter with no data dependency on this
+                    # microbatch's forward below, so the latency-hiding
+                    # scheduler overlaps the two
+                    g_acc = jax.tree.map(jnp.add, g_acc,
+                                         pod_reduce(pending))
+                    (_, ce), g1_g = mb_grads(i)
+                    return (g_acc, g1_g, ce_acc + ce), None
+
+                (_, ce_first), pending0 = mb_grads(0)
+                (g_acc, pending, ce_sum), _ = jax.lax.scan(
+                    acc_body, (g0, pending0, ce0 + ce_first),
+                    jnp.arange(1, nm))
+                # epilogue: the last microbatch's reduce has nothing
+                # left to hide behind
+                grads = jax.tree.map(jnp.add, g_acc, pod_reduce(pending))
+            else:
+                mb_loss = mb_loss_of(
+                    lambda tp_: bundle.merge(tp_, frozen_params), model)
+
+                def acc_body(carry, i):
+                    g_acc, ce_acc = carry
+                    mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                    (_, ce), g = jax.value_and_grad(
+                        mb_loss, has_aux=True)(train_params, mb)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (g_acc, ce_acc + ce), None
+                (grads, ce_sum), _ = jax.lax.scan(
+                    acc_body, (g0, ce0), jnp.arange(nm))
             grads = jax.tree.map(lambda g: g / nm, grads)
             ce, auxl, cnt = ce_sum / nm, jnp.float32(0), jnp.float32(1)
         else:
@@ -115,15 +217,15 @@ def build_train_step(bundle):
         if grad_sync:
             grads = [jax.lax.psum(g, grad_sync[j]) if j in grad_sync else g
                      for j, g in enumerate(grads)]
-        if zero2:
-            grads = [rs_intra(g, z2_dims[j]) if j in z2_dims else g
+        if widen:
+            grads = [rs_widen(g, *widen[j]) if j in widen else g
                      for j, g in enumerate(grads)]
         grads, gnorm = clip_by_global_norm(
             grads, train_reps, opt_cfg.grad_clip, dp_axes, tp_present)
         new_params, new_opt = adamw_update(
             grads, opt_state, opt_cfg, sys, wd_mask)
-        if zero2:
-            new_params = [ag_intra(p_, z2_dims[j]) if j in z2_dims else p_
+        if widen:
+            new_params = [ag_widen(p_, *widen[j]) if j in widen else p_
                           for j, p_ in enumerate(new_params)]
         metrics = {"loss": ce, "aux_loss": auxl, "grad_norm": gnorm,
                    "tokens": cnt}

@@ -26,9 +26,11 @@ Frozen parameters (FCDP-Comm) are *stored* in the cached layout
 never touches DCN and they receive no gradient. See core/comm.py.
 
 The gather is exposed both fused (``gather_param``) and split into its
-two stages (``gather_stage1`` / ``gather_stage2``) so the layer-ahead
-prefetch scheduler (models/stack.py) can issue layer i+1's stage-1 DCN
-gather concurrently with layer i's compute.
+two stages (``gather_stage1`` / ``gather_stage2``) so the streaming
+gather scheduler (core/schedule.py) can issue layer i+k's stage-1 DCN
+gather concurrently with layer i's compute, and ``_ag_fn`` (the
+frozen/trainable gather-primitive selector) is shared with the
+scheduler's leaf-level stage-1 helpers.
 """
 from __future__ import annotations
 
@@ -123,11 +125,6 @@ def gather_param(w: jax.Array, plan: GatherPlan) -> jax.Array:
     if not plan.is_gathered:
         return w
     return gather_stage2(gather_stage1(w, plan), plan)
-
-
-def gather_tree(params, plans):
-    return jax.tree.map(gather_param, params, plans,
-                        is_leaf=lambda x: isinstance(x, GatherPlan))
 
 
 # ---------------------------------------------------------------------------

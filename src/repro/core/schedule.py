@@ -1,0 +1,278 @@
+"""The streaming gather scheduler: FCDP's communication schedule as a
+first-class subsystem.
+
+FCDP's throughput story is a *schedule* -- which all-gather stage runs
+when, and what the backward reads instead of re-communicating. This
+module owns that schedule for the layer-group scans (it replaces the
+hand-rolled double-buffer that used to live inline in
+``models/stack.py``) and provides the leaf-level primitives for the
+second stream, the async pod-axis gradient reduce in
+``engine/train.py``.
+
+Stream 1 -- depth-k stage-1 gather prefetch (:class:`GatherScheduler`)
+----------------------------------------------------------------------
+The scheduler runs the layer-group scan with a ring buffer of ``k``
+in-flight stage-1 (inter/DCN) gather caches::
+
+    ring = [stage1(params[0]), ..., stage1(params[k-1])]   # prologue
+    scan i = 0..n-k-1:
+        issue stage1(params[i+k])        # no data dependency on layer
+        x = compute(x, stage2(ring[0]))  # i's compute: overlaps under
+        ring = ring[1:] + [issued]       # XLA's latency-hiding scheduler
+    drain the ring: k more compute steps  # epilogue
+
+``k == 0`` is the sequential schedule (each step runs its own fused
+two-stage gather). Because the ring rides the scan carry, the backward
+pass reads the carried caches back instead of re-running stage 1:
+depth k trades k in-flight stage-1 buffers (plus the saved carries)
+for up to k layers' worth of DCN overlap. The same scheduler drives
+both the stateless scan (train loss / encoder) and the stateful
+prefill/decode scan (engine/serve.py); it is a structural no-op when
+no plan has a non-empty stage 1 (MiCS/hier, single-pod meshes,
+FCDP-Comm frozen layouts).
+
+Stream 2 -- async pod-axis gradient reduce (leaf-level helpers)
+---------------------------------------------------------------
+On the gradient-accumulation path, the pod-axis gradient
+reduce-scatter of microbatch i can run concurrently with microbatch
+i+1's forward instead of serializing inside the backward. The
+mechanism mirrors stream 1: the microbatch loss is differentiated with
+respect to the *stage-1-gathered* parameter view
+(:func:`stage1_resident_plans` strips the inter axes the model would
+otherwise re-gather), so each microbatch's backward stops at
+stage-1-level gradients; :func:`leaf_stage1_reduce` then applies the
+deferred pod-axis psum_scatter one microbatch later, where it has no
+data dependency on the in-flight forward. One stage-1-sized gradient
+buffer is in flight at all times; total reduce volume is unchanged.
+
+Memory accounting
+-----------------
+:func:`prefetch_buffer_bytes` is the analytic per-chip size of the k
+in-flight ring slots. FCDP-Cache's planner (core/cache.py) counts it
+against the tau/HBM budget and demotes prefetch depth before demoting
+the device cache; launch/dryrun.py and launch/roofline.py surface it
+per cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fcdp import (_ag_fn, gather_param, gather_stage1,
+                             gather_stage2)
+from repro.core.strategy import GatherPlan
+
+_is_plan = lambda x: isinstance(x, GatherPlan)  # noqa: E731
+
+
+class GatherScheduler:
+    """Owns the gather/communication schedule of one layer-group scan.
+
+    Resolves the ring depth once (strategy stream capability x config x
+    mesh x plan prefetchability) and runs whichever schedule applies:
+
+      depth 0: sequential -- each scan step runs its own fused
+               two-stage gather (the paper-faithful baseline).
+      depth k: ring buffer of k in-flight stage-1 caches; step i issues
+               layer i+k's stage-1 (DCN) gather while computing layer i
+               from the oldest slot via stage 2 only.
+
+    ``enabled=False`` forces the sequential schedule regardless of
+    config (used by the gather-free sharded-MoE decode path, whose raw
+    expert shards must not be pre-gathered).
+    """
+
+    def __init__(self, strategy, sys, mesh_like, plans,
+                 enabled: bool = True):
+        self.strategy = strategy
+        self.plans = plans
+        leaves = jax.tree.leaves(plans, is_leaf=_is_plan)
+        prefetchable = any(p.prefetchable for p in leaves if _is_plan(p))
+        self.depth = (strategy.prefetch_depth(sys, mesh_like)
+                      if (enabled and prefetchable) else 0)
+
+    # -- stage-1 issue --------------------------------------------------------
+    def _stage1(self, params_slice):
+        """Issue the stage-1 (inter/DCN) gathers for one layer group."""
+        return jax.tree.map(gather_stage1, params_slice, self.plans,
+                            is_leaf=_is_plan)
+
+    # -- entry point ----------------------------------------------------------
+    def run(self, make_body: Callable, wrap: Callable, stacked_params,
+            x, aux0, stacked_state=None):
+        """Scan the layer group under the resolved schedule.
+
+        make_body(gather_leaf) must return ``body(x, params_slice,
+        state_slice) -> (x, new_state, aux)`` where ``gather_leaf``
+        reconstructs one param leaf from whatever the schedule feeds it
+        (raw shards on the sequential schedule, stage-1 caches on the
+        prefetch schedule). ``wrap`` applies the remat policy around the
+        body. Returns ``(x, new_stacked_state | None, aux)``.
+        """
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        k = min(self.depth, n)
+        if k == 0:
+            return self._run_sequential(make_body, wrap, stacked_params,
+                                        x, aux0, stacked_state)
+        return self._run_prefetch(make_body, wrap, stacked_params,
+                                  x, aux0, stacked_state, n, k)
+
+    # -- sequential schedule --------------------------------------------------
+    def _run_sequential(self, make_body, wrap, stacked_params, x, aux0,
+                        stacked_state):
+        wrapped = wrap(make_body(gather_param))
+        if stacked_state is not None:
+            def body(carry, inp):
+                x, = carry
+                params_slice, state_slice = inp
+                x, new_state, a = wrapped(x, params_slice, state_slice)
+                return (x,), (new_state, a)
+            (x,), (new_states, auxs) = jax.lax.scan(
+                body, (x,), (stacked_params, stacked_state))
+            return x, new_states, aux0 + jnp.sum(auxs)
+
+        def body(carry, params_slice):
+            x, aux = carry
+            x, _, a = wrapped(x, params_slice, None)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked_params)
+        return x, None, aux
+
+    # -- depth-k prefetch schedule --------------------------------------------
+    def _run_prefetch(self, make_body, wrap, stacked_params, x, aux0,
+                      stacked_state, n: int, k: int):
+        wrapped = wrap(make_body(gather_stage2))
+        # prologue: fill the ring with layers 0..k-1's stage-1 caches
+        ring0 = tuple(
+            self._stage1(jax.tree.map(lambda a, i=i: a[i], stacked_params))
+            for i in range(k))
+        rest = jax.tree.map(lambda a: a[k:], stacked_params)
+
+        if stacked_state is not None:
+            lead_state = jax.tree.map(lambda a: a[:n - k], stacked_state)
+
+            def body(carry, inp):
+                x, aux, ring = carry
+                slice_ahead, state_slice = inp
+                # issue layer i+k's stage-1 (DCN) gather: independent of
+                # layer i's compute below, so the scheduler overlaps them
+                cache_next = self._stage1(slice_ahead)
+                x, new_state, a = wrapped(x, ring[0], state_slice)
+                return (x, aux + a, ring[1:] + (cache_next,)), new_state
+            (x, aux, ring), new_lead = jax.lax.scan(
+                body, (x, aux0, ring0), (rest, lead_state))
+            # epilogue: drain the ring against the last k state slices
+            tails = []
+            for j in range(k):
+                st = jax.tree.map(lambda a, i=n - k + j: a[i], stacked_state)
+                x, st_new, a = wrapped(x, ring[j], st)
+                aux = aux + a
+                tails.append(st_new)
+            tail = jax.tree.map(lambda *xs: jnp.stack(xs), *tails)
+            new_state = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), new_lead, tail)
+            return x, new_state, aux
+
+        def body(carry, slice_ahead):
+            x, aux, ring = carry
+            cache_next = self._stage1(slice_ahead)
+            x, _, a = wrapped(x, ring[0], None)
+            return (x, aux + a, ring[1:] + (cache_next,)), None
+        (x, aux, ring), _ = jax.lax.scan(body, (x, aux0, ring0), rest)
+        for j in range(k):                    # epilogue: drain the ring
+            x, _, a = wrapped(x, ring[j], None)
+            aux = aux + a
+        return x, None, aux
+
+
+# ---------------------------------------------------------------------------
+# Stream 2: leaf-level stage-1 primitives for the async gradient reduce
+# (storage-level views: the fsdp dim index comes from the ParamDef, NOT
+# from the plan, whose dim is shifted to the scan-body view)
+# ---------------------------------------------------------------------------
+
+def stage1_resident_plans(plans):
+    """Plan tree for a model consuming stage-1-gathered parameters:
+    the inter (DCN) axes are stripped, so every in-model gather runs
+    stage 2 only and every gather transpose reduces intra-pod only."""
+    def strip(p):
+        if not (_is_plan(p) and p.inter_axes):
+            return p
+        return dataclasses.replace(p, inter_axes=())
+    return jax.tree.map(strip, plans, is_leaf=_is_plan)
+
+
+def leaf_stage1(w: jax.Array, pdef, plan: GatherPlan) -> jax.Array:
+    """Stage-1 (inter/DCN) gather of a whole (possibly stacked) storage
+    leaf. Identity when the plan has no inter axes."""
+    if not (plan.is_gathered and plan.inter_axes):
+        return w
+    return _ag_fn(plan)(w, plan.inter_axes, pdef.fsdp_dim)
+
+
+def leaf_stage1_reduce(gbar: jax.Array, pdef, plan: GatherPlan) -> jax.Array:
+    """Transpose of :func:`leaf_stage1`: pod-axis reduce-scatter of a
+    stage-1-level gradient down to the storage shard. This is the
+    collective the async stream takes off the critical path."""
+    if not (plan.is_gathered and plan.inter_axes):
+        return gbar
+    return jax.lax.psum_scatter(gbar, plan.inter_axes,
+                                scatter_dimension=pdef.fsdp_dim, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Analytic memory accounting (consumed by core/cache.py and launch/)
+# ---------------------------------------------------------------------------
+
+def async_reduce_enabled(run, strategy, mi) -> bool:
+    """Whether engine/train.py actually runs the async grad-reduce
+    stream for this run: the flag must be on, the strategy willing, a
+    pod axis present, gradient accumulation active, and no int8
+    gradient compression (whose custom stage-1 vjp owns the reduce)."""
+    sys = run.system
+    return (bool(run.microbatch and run.microbatch > 1)
+            and sys.grad_compress == "none"
+            and strategy.async_grad_reduce_active(sys, mi))
+
+
+def async_buffer_bytes(strategy, def_leaves, plan_leaves, mi) -> float:
+    """Per-chip HBM bytes the async grad-reduce stream keeps resident:
+    the stage-1-gathered view of EVERY leaf with a non-empty stage 1
+    (the microbatch loss consumes pre-gathered params at leaf level
+    rather than gathering per layer inside the scan) plus the carried
+    stage-1-level gradient buffer for the trainable leaves."""
+    total = 0.0
+    for d, p in zip(def_leaves, plan_leaves):
+        if not (_is_plan(p) and p.is_gathered and p.inter_axes):
+            continue
+        view = strategy.cached_bytes_for(d, p, mi)
+        total += view                        # gathered param view
+        if not d.frozen:
+            total += view                    # in-flight grad buffer
+    return total
+
+
+def prefetch_buffer_bytes(strategy, def_leaves, plan_leaves, mi,
+                          depth: int) -> float:
+    """Per-chip HBM bytes of the ``depth`` in-flight stage-1 ring slots.
+
+    One ring slot holds one layer group's stage-1 caches: the per-leaf
+    stage-1 shard size (strategy.cached_bytes_for, cache_after == 1)
+    divided by that leaf's stack length. Leaves without a stage 1
+    (frozen layouts, replicated tensors) or outside the scan contribute
+    nothing.
+    """
+    if depth <= 0:
+        return 0.0
+    per_group = 0.0
+    for d, p in zip(def_leaves, plan_leaves):
+        if not (_is_plan(p) and p.prefetchable):
+            continue
+        if "stack" not in d.dims:
+            continue
+        n = d.shape[d.dims.index("stack")]
+        per_group += strategy.cached_bytes_for(d, p, mi) / max(n, 1)
+    return float(depth) * per_group

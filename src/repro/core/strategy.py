@@ -11,26 +11,32 @@ re-runs. A ``ShardingStrategy`` centralizes every decision a mode makes:
   cache placement     where the remat policy parks the stage-1 result
                       ('regather' | 'device' | 'host')
   device-cache split  how FCDP-Cache's tau fraction maps to layer groups
-  prefetch gating     whether the layer-ahead stage-1 prefetch applies
+  stream capability   how deep the streaming gather scheduler may prefetch
+                      (max_prefetch_depth) and whether the async pod-axis
+                      gradient-reduce stream applies
+  opt layout          optimizer-state sharding (may be wider than params)
   byte accounting     analytic cache/comm sizes for the planner/roofline
 
 ``SystemConfig.mode`` is resolved to a strategy object exactly once (at
 ``StepBundle``/model construction) via :func:`get_strategy`; no other
 module compares mode strings.
 
-The four built-ins mirror the paper's comparison set:
+The built-ins mirror the paper's comparison set plus one related-work
+extension:
 
   zero3   full ('pod','data') sharding, regather fwd+bwd     (baseline)
   zeropp  full sharding, stage-1 result cached in HBM        (ZeRO++)
   fcdp    full sharding, stage-1 result cached in pinned
           host memory; frozen params stored pre-gathered     (the paper)
   mics    pod-replicated ('data',) sharding; no DCN gathers  (MiCS)
+  hier    pod-replicated params, optimizer state sharded
+          over ('pod','data')             (hierarchical part., Xu et al.)
 
-New modes register with :func:`register_strategy` (e.g. a hierarchical-
-partitioning strategy that shards optimizer state wider than params).
+New modes register with :func:`register_strategy`.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple, Type, Union
@@ -90,9 +96,18 @@ class ShardingStrategy:
     frozen_cached_layout: bool = False
     # FCDP-Cache's tau knob (device_cache_fraction) applies
     supports_device_cache: bool = False
-    # layer-ahead stage-1 prefetch can apply (False when stage 1 is
-    # structurally empty, as for MiCS)
-    supports_prefetch: bool = True
+    # -- stream capability surface (consumed by core/schedule.py and
+    # engine/train.py): how deep the streaming gather scheduler may run
+    # its stage-1 ring buffer (0 when stage 1 is structurally empty, as
+    # for MiCS/hier), and whether the async pod-axis gradient-reduce
+    # stream applies (it needs a per-microbatch stage-1 reduce to move).
+    max_prefetch_depth: int = 8
+    supports_async_grad_reduce: bool = True
+
+    @property
+    def supports_prefetch(self) -> bool:
+        """Legacy boolean view of ``max_prefetch_depth``."""
+        return self.max_prefetch_depth > 0
 
     # -- storage layout -----------------------------------------------------
     def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
@@ -113,19 +128,36 @@ class ShardingStrategy:
             axes = tuple(a for a in axes if a == INTER_AXIS)
         return axes
 
-    def storage_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+    def _spec_with_axes(self, pdef, mesh, axes: Tuple[str, ...],
+                        min_shard_size: int = 0) -> P:
         entries: list = [None] * len(pdef.shape)
         small = pdef.size() < min_shard_size
         if pdef.tp_dim is not None:
             entries[pdef.tp_dim] = "model"
-        if pdef.fsdp_dim is not None and not small:
-            axes = self.effective_fsdp_axes(pdef, mesh)
-            if axes:
-                # only shard if divisible
-                degree = math.prod(mesh.shape[a] for a in axes)
-                if pdef.shape[pdef.fsdp_dim] % degree == 0:
-                    entries[pdef.fsdp_dim] = axes if len(axes) > 1 else axes[0]
+        if pdef.fsdp_dim is not None and not small and axes:
+            # only shard if divisible
+            degree = math.prod(mesh.shape[a] for a in axes)
+            if pdef.shape[pdef.fsdp_dim] % degree == 0:
+                entries[pdef.fsdp_dim] = axes if len(axes) > 1 else axes[0]
         return P(*entries)
+
+    def storage_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+        return self._spec_with_axes(
+            pdef, mesh, self.effective_fsdp_axes(pdef, mesh), min_shard_size)
+
+    def opt_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+        """Storage layout of the optimizer state (and master weights).
+
+        Defaults to the param's own layout with the fsdp scope widened
+        to 'full' (the ZeRO-2-for-experts seam); hierarchical
+        partitioning overrides this to shard optimizer state wider than
+        the params themselves. engine/train.py reduce-scatters grads
+        over (opt axes - storage axes) before the update and gathers
+        the updated shard back.
+        """
+        full = dataclasses.replace(pdef, fsdp_scope="full")
+        return self._spec_with_axes(
+            full, mesh, self.effective_fsdp_axes(full, mesh), min_shard_size)
 
     # -- gather schedule ----------------------------------------------------
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
@@ -168,16 +200,33 @@ class ShardingStrategy:
             return 0
         return int(round(fraction * n_groups))
 
-    # -- prefetch -------------------------------------------------------------
-    def prefetch_active(self, sys, mesh_like) -> bool:
-        """Whether the layer-ahead stage-1 prefetch schedule applies.
+    # -- scheduler streams ----------------------------------------------------
+    def prefetch_depth(self, sys, mesh_like) -> int:
+        """Resolved ring-buffer depth for the streaming gather scheduler.
 
         mesh_like: anything with ``axis_names`` (Mesh or MeshInfo).
-        A no-op when the mode has no stage-1 (MiCS) or the mesh has no
-        slow tier (single pod): there is nothing to overlap.
+        0 when the mode has no stage 1 (MiCS/hier), the mesh has no slow
+        tier (single pod), or the config asks for the sequential
+        schedule; otherwise min(requested depth, max_prefetch_depth).
         """
-        return (bool(getattr(sys, "prefetch", False))
-                and self.supports_prefetch
+        depth = getattr(sys, "prefetch_depth", None)
+        if depth is None:                    # raw legacy configs
+            depth = 1 if getattr(sys, "prefetch", False) else 0
+        if INTER_AXIS not in tuple(mesh_like.axis_names):
+            return 0
+        return max(0, min(int(depth), self.max_prefetch_depth))
+
+    def prefetch_active(self, sys, mesh_like) -> bool:
+        """Whether the layer-ahead stage-1 prefetch schedule applies."""
+        return self.prefetch_depth(sys, mesh_like) > 0
+
+    def async_grad_reduce_active(self, sys, mesh_like) -> bool:
+        """Whether the async pod-axis gradient-reduce stream applies:
+        the strategy must have a non-empty stage 1 whose per-microbatch
+        reduce can be taken off the critical path, and the mesh must
+        have a slow tier to hide."""
+        return (bool(getattr(sys, "async_grad_reduce", False))
+                and self.supports_async_grad_reduce
                 and INTER_AXIS in tuple(mesh_like.axis_names))
 
     # -- analytic byte accounting --------------------------------------------
@@ -247,10 +296,39 @@ class MiCS(ShardingStrategy):
     (fwd+bwd intra AG, no DCN AG). Gradients all-reduce across pods."""
     name = "mics"
     cache_placement = "regather"
-    supports_prefetch = False
+    max_prefetch_depth = 0            # stage 1 structurally empty
+    supports_async_grad_reduce = False
 
     def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
         return intra_fsdp_axes(mesh)
+
+
+class Hierarchical(MiCS):
+    """Hierarchical partitioning (Xu et al.): params shard intra-pod
+    only (MiCS gathers: no DCN AG in the step), but optimizer state and
+    master weights shard over the FULL ('pod','data') product -- the
+    low-bandwidth trade that keeps MiCS's cheap gathers while paying
+    only one pod-axis grad reduce-scatter plus one pod-axis updated-
+    shard all-gather per step (amortized over all microbatches) instead
+    of MiCS's per-step pod all-reduce of full shard-level grads."""
+    name = "hier"
+
+    def opt_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+        full = dataclasses.replace(pdef, fsdp_scope="full")
+        # bypass the pod-replicated param layout: opt state goes
+        # full-width. Storage axes come FIRST in the tiling order so the
+        # widening reduce-scatter of a storage-sharded gradient (which
+        # subdivides each storage block over the widening axes) lands on
+        # the same global slice the opt spec assigns to the device.
+        storage = self.effective_fsdp_axes(full, mesh)
+        widened = storage + tuple(a for a in fsdp_axes(mesh)
+                                  if a not in storage)
+        spec = self._spec_with_axes(full, mesh, widened, min_shard_size)
+        if pdef.fsdp_dim is not None and spec[pdef.fsdp_dim] is None:
+            # full-width degree does not divide: keep the param layout
+            # (opt state must never shard narrower than storage)
+            return super().opt_spec(pdef, mesh, min_shard_size)
+        return spec
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +346,7 @@ def register_strategy(cls: Type[ShardingStrategy]) -> Type[ShardingStrategy]:
     return cls
 
 
-for _cls in (Zero3, ZeroPP, FCDP, MiCS):
+for _cls in (Zero3, ZeroPP, FCDP, MiCS, Hierarchical):
     register_strategy(_cls)
 
 DEFAULT_STRATEGY = FCDP.name

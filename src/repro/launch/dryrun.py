@@ -38,7 +38,8 @@ def _mesh_sizes(mesh):
 
 def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                 mode: str = DEFAULT_STRATEGY, system_overrides=None,
-                verbose: bool = True, prefetch: bool = True):
+                verbose: bool = True, prefetch: bool = True,
+                prefetch_depth=None):
     cfg = get_config(arch)
     cell = shape_cell(cell_name)
     ok, why = cell_supported(cfg, cell)
@@ -49,17 +50,24 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     # block_io (full activation remat) is the HBM-fitting default on
     # 16 GB v5e at the assigned shapes; the paper-faithful save_all
     # variant is compared in benchmarks/bench_memory.py (see EXPERIMENTS.md)
+    if prefetch_depth is None:
+        prefetch_depth = 1 if prefetch else 0
     sysc = SystemConfig(mode=mode, loss_chunk=2048,
-                        activation_policy="block_io", prefetch=prefetch)
+                        activation_policy="block_io",
+                        prefetch_depth=prefetch_depth)
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
     run = RunConfig(model=cfg, shape=cell, system=sysc)
     t0 = time.time()
     bundle = StepBundle(run, mesh)
-    # does the resolved strategy actually run the prefetch schedule on
-    # this (mode x mesh x cell)? mirrored into the roofline overlap model
-    prefetch_live = (cell.kind == "train"
-                     and bundle.strategy.prefetch_active(sysc, mesh))
+    # the depth the streaming gather scheduler actually runs at on this
+    # (mode x mesh x cell) -- mirrored into the roofline overlap model.
+    # The scheduler drives serve scans too; cells whose plans have no
+    # stage 1 (serve_frozen fcdp layouts) report ~zero pod-AG bytes and
+    # get no credit regardless.
+    from repro.core.cache import cache_bytes_per_chip
+    acct = cache_bytes_per_chip(bundle)
+    depth_live = acct["prefetch_depth"]
     seq_sharded = (cell.name == "long_500k")
     if cell.kind == "train":
         step = bundle.make_train_step()
@@ -91,12 +99,19 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         ca = ca[0]
     flops_ca = float(ca.get("flops", 0.0))     # lower bound: loops counted 1x
     bytes_ca = float(ca.get("bytes accessed", 0.0))
-    rep = roofline_report(flops_exact, bytes_naive, stats, cfg, cell, n_chips,
-                          prefetch=prefetch_live)
+    rep = roofline_report(
+        flops_exact, bytes_naive, stats, cfg, cell, n_chips,
+        prefetch=depth_live,
+        inflight_bytes=acct["prefetch_buffer_bytes_per_chip"])
     result = {
         "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
         "mode": mode, "status": "ok",
         "n_chips": n_chips,
+        "prefetch_depth": depth_live,
+        "prefetch_buffer_bytes_per_chip":
+            acct["prefetch_buffer_bytes_per_chip"],
+        "async_buffer_bytes_per_chip":
+            acct["async_buffer_bytes_per_chip"],
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": {
             "argument_bytes": ma.argument_size_in_bytes,
@@ -141,6 +156,9 @@ def main():
                     choices=list(strategy_names()))
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the layer-ahead stage-1 gather prefetch")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="ring depth of the streaming gather scheduler "
+                         "(default: 1, or 0 with --no-prefetch)")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x cell) on both meshes")
     ap.add_argument("--out", default=None)
@@ -165,7 +183,8 @@ def main():
     for arch, cell, mp in combos:
         try:
             r = dryrun_cell(arch, cell, mp, args.mode,
-                            prefetch=not args.no_prefetch)
+                            prefetch=not args.no_prefetch,
+                            prefetch_depth=args.prefetch_depth)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,

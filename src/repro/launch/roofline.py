@@ -282,16 +282,29 @@ def model_flops(cfg, cell, n_chips: int) -> float:
 
 def roofline_report(flops_per_chip: float, bytes_per_chip: float,
                     stats: CollectiveStats, cfg, cell,
-                    n_chips: int, prefetch: bool = False) -> Dict[str, Any]:
-    """Derive the three roofline terms, plus -- when the layer-ahead
-    prefetch schedule is active -- the overlap credit: the stage-1
-    (pod-axis) parameter all-gathers are issued one layer ahead of the
+                    n_chips: int, prefetch: Any = False,
+                    inflight_bytes: float = 0.0) -> Dict[str, Any]:
+    """Derive the three roofline terms, plus -- when the streaming
+    gather scheduler's prefetch is active -- the overlap credit: the
+    stage-1 (pod-axis) parameter all-gathers are issued ahead of the
     compute that consumes them, so their time hides under compute up to
-    the compute term itself. ``collective_exposed_s`` is the collective
-    time that remains on the critical path after that credit; modes with
-    no stage-1 (MiCS, frozen layouts, single-pod meshes) have zero
-    pod-axis AG bytes and are reported unchanged.
+    the compute term itself. The DCN link is shared, so each second of
+    compute can hide at most one second of transfer regardless of how
+    many gathers are in flight: in this bandwidth-only model the credit
+    min(stage-1 DCN time, compute term) is the same for every depth
+    >= 1. What depth > 1 buys -- latency/jitter tolerance and
+    pipeline-fill slack -- is below this model's resolution; its
+    visible side is the ring's HBM cost, passed in as
+    ``inflight_bytes`` (core/schedule.py:prefetch_buffer_bytes, which
+    DOES scale with depth) so dry-run consumers see the memory price
+    next to the credit. ``prefetch`` accepts the resolved ring depth
+    (an int; legacy bool means depth 1). ``collective_exposed_s`` is
+    the collective time that remains on the critical path after the
+    credit; modes with no stage-1 (MiCS/hier, frozen layouts,
+    single-pod meshes) have zero pod-axis AG bytes and are reported
+    unchanged.
     """
+    depth = int(prefetch)
     compute_t = flops_per_chip / PEAK_FLOPS
     memory_t = bytes_per_chip / HBM_BW
     ici_t = stats.ici_bytes / ICI_BW
@@ -299,7 +312,7 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     coll_t = ici_t + dcn_t
     # stage-1 parameter gathers: the overlappable DCN term
     stage1_ag_bytes = stats.by_op_axis.get("all_gather/pod", 0.0)
-    overlapped_bytes = stage1_ag_bytes if prefetch else 0.0
+    overlapped_bytes = stage1_ag_bytes if depth > 0 else 0.0
     overlapped_t = min(overlapped_bytes / DCN_BW, compute_t)
     coll_exposed_t = coll_t - overlapped_t
     terms = {"compute": compute_t, "memory": memory_t,
@@ -309,7 +322,9 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     hlo_total = flops_per_chip * n_chips
     return {
         "prefetch": {
-            "enabled": bool(prefetch),
+            "enabled": depth > 0,
+            "depth": depth,
+            "inflight_stage1_bytes_per_chip": float(inflight_bytes),
             "stage1_ag_dcn_bytes_per_chip": stage1_ag_bytes,
             "overlapped_dcn_bytes_per_chip": overlapped_bytes,
             "overlapped_s": overlapped_t,

@@ -47,7 +47,14 @@ def build(args):
                         loss_chunk=args.loss_chunk,
                         min_shard_size=8 if args.smoke else 2048,
                         grad_compress=args.grad_compress,
-                        prefetch=args.prefetch)
+                        # --prefetch-depth overrides --prefetch (an
+                        # explicit bool beats a depth in SystemConfig,
+                        # so drop the bool whenever a depth was given;
+                        # an unset bool is forwarded as None, not False)
+                        prefetch=(args.prefetch or None
+                                  if args.prefetch_depth is None else None),
+                        prefetch_depth=args.prefetch_depth,
+                        async_grad_reduce=args.async_grad_reduce)
     run = RunConfig(model=cfg, shape=cell, system=sysc,
                     optimizer=OptimizerConfig(
                         lr=args.lr, total_steps=args.steps,
@@ -86,7 +93,14 @@ def main(argv=None):
     ap.add_argument("--mode", default=DEFAULT_STRATEGY,
                     choices=list(strategy_names()))
     ap.add_argument("--prefetch", action="store_true",
-                    help="layer-ahead stage-1 gather prefetch")
+                    help="layer-ahead stage-1 gather prefetch (depth 1)")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="ring depth of the streaming gather scheduler "
+                         "(overrides --prefetch)")
+    ap.add_argument("--async-grad-reduce", action="store_true",
+                    help="overlap microbatch i's pod-axis grad reduce "
+                         "with microbatch i+1's forward (needs "
+                         "--microbatch > 1)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--peft", action="store_true")

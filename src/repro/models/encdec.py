@@ -6,6 +6,7 @@ The decoder is a standard causal stack with per-layer cross-attention.
 """
 from __future__ import annotations
 
+import copy
 import math
 from typing import Any, Dict, Tuple
 
@@ -55,6 +56,13 @@ class EncDec:
 
     defs = property(lambda self: self._defs)
     plans = property(lambda self: self._plans)
+
+    def with_plans(self, plans):
+        """Shallow view bound to a different GatherPlan tree (async
+        grad-reduce stream, see core/schedule.py)."""
+        m = copy.copy(self)
+        m._plans = plans
+        return m
 
     def _encode(self, params, enc_embeds):
         """enc_embeds: [B, S_enc, D] precomputed frame embeddings (stub)."""

@@ -3,6 +3,7 @@ vlm families. Chameleon-style VLM is a decoder over a unified token space
 (VQ image tokens arrive pre-embedded through the frontend stub)."""
 from __future__ import annotations
 
+import copy
 import math
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -75,6 +76,14 @@ class LM:
     @property
     def plans(self):
         return self._plans
+
+    def with_plans(self, plans):
+        """Shallow view of this model bound to a different GatherPlan
+        tree (the async grad-reduce stream feeds stage-1-resident
+        params, see core/schedule.py:stage1_resident_plans)."""
+        m = copy.copy(self)
+        m._plans = plans
+        return m
 
     # -- shared forward pieces ----------------------------------------------
     def _embed(self, params, ids):

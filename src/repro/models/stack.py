@@ -6,36 +6,32 @@ A "plan" is a list of positions; each position is a tuple of sublayer
 kinds. The whole group repeats `n_groups` times (params stacked on a
 leading 'stack' dim, applied with jax.lax.scan).
 
-Two scan schedules are provided:
-
-  sequential (default): each scan step gathers (stage 1 + stage 2) and
-  computes its own layer group; the strategy's remat policy decides what
-  the backward re-gathers.
-
-  layer-ahead prefetch (SystemConfig.prefetch, strategy-gated): the scan
-  carry double-buffers the stage-1 (inter/DCN) gather result, so step i
-  issues layer i+1's stage-1 all-gather -- which has no data dependency
-  on layer i's compute and overlaps with it under XLA's latency-hiding
-  scheduler -- while computing layer i from the carried cache. A no-op
-  whenever stage 1 is structurally empty (MiCS, single-pod meshes,
-  FCDP-Comm frozen layouts). Because the prefetched cache rides the scan
-  carry, the backward pass reads it back instead of re-running stage 1:
-  prefetch trades one in-flight stage-1 buffer (plus saved carries) for
-  full DCN overlap. Applied on the stateless path only (training loss /
-  encoder); serve paths keep the sequential schedule.
+This module owns the model-specific part only -- building per-position
+sublayer bodies and dispatching them. WHICH gather runs when is the
+streaming gather scheduler's job (``core/schedule.py``):
+``apply_stack`` hands its group body to a :class:`GatherScheduler`,
+which runs either the sequential schedule (each scan step fuses its own
+two-stage gather; ``SystemConfig.prefetch_depth == 0``) or the depth-k
+prefetch schedule (a ring buffer of k in-flight stage-1 / DCN gather
+caches riding the scan carry, so layer i+k's DCN transfer overlaps
+layer i's compute and the backward reads the carried caches back
+instead of re-gathering). Both the stateless scan (training loss /
+encoder) and the stateful prefill/decode scan run under the scheduler;
+strategy gating and the memory trade are documented in
+``core/schedule.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SystemConfig
-from repro.core.fcdp import (checkpoint_layer, gather_param, gather_stage1,
-                             gather_stage2, gather_tree)
+from repro.core.fcdp import checkpoint_layer
 from repro.core.partition import ParamDef, tree_map_defs
+from repro.core.schedule import GatherScheduler
 from repro.core.strategy import GatherPlan, resolve_strategy
 from repro.models import sublayers as sl
 from repro.models.common import MeshInfo
@@ -178,7 +174,8 @@ def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
                 stacked_params, stacked_plans, x, ctx: Dict[str, Any],
                 stacked_state=None, placement: Optional[str] = None,
                 strategy=None):
-    """Scan the group over the stack dimension with the FCDP schedule.
+    """Scan the group over the stack dimension under the streaming
+    gather scheduler (core/schedule.py: sequential or depth-k prefetch).
 
     stacked_params: pytree with leading stack dim on every leaf.
     stacked_plans: GatherPlan tree (body-level dims, see plan_tree(stacked=True)).
@@ -187,7 +184,6 @@ def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
     """
     strategy = resolve_strategy(strategy if strategy is not None
                                 else sys.mode)
-    has_state = stacked_state is not None
 
     moe_sharded = (getattr(sys, "moe_serve_sharded", False)
                    and ctx.get("decode"))
@@ -233,55 +229,11 @@ def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
         return checkpoint_layer(body, strategy, sys.activation_policy,
                                 sys.host_offload, placement=placement)
 
-    if has_state:
-        wrapped = wrap(make_group_body(gather_param))
-
-        def body(carry, inp):
-            x, = carry
-            params_slice, state_slice = inp
-            x, new_state, aux = wrapped(x, params_slice, state_slice)
-            return (x,), (new_state, aux)
-        (x,), (new_states, auxs) = jax.lax.scan(
-            body, (x,), (stacked_params, stacked_state))
-        return x, new_states, jnp.sum(auxs)
-
     from repro.models.common import pvary_like
     aux0 = pvary_like(jnp.float32(0), x)
-
-    plan_leaves = jax.tree.leaves(stacked_plans, is_leaf=_is_plan)
-    prefetch_on = (strategy.prefetch_active(sys, mi)
-                   and any(p.prefetchable for p in plan_leaves
-                           if _is_plan(p)))
-
-    if not prefetch_on:
-        wrapped = wrap(make_group_body(gather_param))
-
-        def body(carry, params_slice):
-            x, aux = carry
-            x, _, a = wrapped(x, params_slice, None)
-            return (x, aux + a), None
-        (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked_params)
-        return x, None, aux
-
-    # -- layer-ahead prefetch schedule (double-buffered stage-1 cache) ----
-    wrapped = wrap(make_group_body(gather_stage2))
-
-    def stage1_slice(params_slice):
-        return jax.tree.map(gather_stage1, params_slice, stacked_plans,
-                            is_leaf=_is_plan)
-
-    first = jax.tree.map(lambda a: a[0], stacked_params)
-    rest = jax.tree.map(lambda a: a[1:], stacked_params)
-    cache0 = stage1_slice(first)
-
-    def body(carry, slice_next):
-        x, aux, cache = carry
-        # issue layer i+1's stage-1 (DCN) gather: independent of layer
-        # i's compute below, so the scheduler can overlap the two
-        cache_next = stage1_slice(slice_next)
-        x, _, a = wrapped(x, cache, None)
-        return (x, aux + a, cache_next), None
-
-    (x, aux, cache_last), _ = jax.lax.scan(body, (x, aux0, cache0), rest)
-    x, _, a = wrapped(x, cache_last, None)
-    return x, None, aux + a
+    # the gather-free sharded-MoE decode path consumes raw expert shards;
+    # pre-gathering them would break its partial-contraction math
+    sched = GatherScheduler(strategy, sys, mi, stacked_plans,
+                            enabled=not moe_sharded)
+    return sched.run(make_group_body, wrap, stacked_params, x, aux0,
+                     stacked_state)

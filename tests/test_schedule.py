@@ -1,0 +1,308 @@
+"""Streaming gather scheduler tests: SystemConfig depth validation and
+back-compat, strategy stream capabilities, serve-path depth-k prefetch
+parity, the async pod-axis gradient-reduce stream, and the
+prefetch-aware FCDP-Cache planner."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                ShapeCell, SystemConfig)
+from repro.core.engine import StepBundle
+from repro.core.strategy import get_strategy
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=3, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                    qkv_bias=True)
+CELL = ShapeCell("t", "train", 64, 8)
+PREFILL = ShapeCell("p", "prefill", 32, 8)
+DECODE = ShapeCell("d", "decode", 32, 8)
+
+
+def make_bundle(mesh, cell=CELL, mode="fcdp", microbatch=0, **sys_kw):
+    sysd = dict(mode=mode, min_shard_size=8)
+    sysd.update(sys_kw)
+    run = RunConfig(model=DENSE, shape=cell, system=SystemConfig(**sysd),
+                    optimizer=OptimizerConfig(total_steps=8, warmup_steps=2,
+                                              lr=1e-3),
+                    microbatch=microbatch)
+    return StepBundle(run, mesh)
+
+
+def make_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"ids": jnp.asarray(
+            rng.integers(1, DENSE.vocab_size,
+                         (CELL.global_batch, CELL.seq_len)), jnp.int32),
+         "labels": jnp.asarray(
+            rng.integers(1, DENSE.vocab_size,
+                         (CELL.global_batch, CELL.seq_len)), jnp.int32)}
+    b["mask"] = jnp.ones_like(b["labels"], bool)
+    return b
+
+
+def run_one_step(bundle):
+    from repro.optim.adamw import init_opt_state
+    params = bundle.init_all_params(seed=0)
+    tp, fp = bundle.split(params)
+    opt = jax.jit(functools.partial(
+        init_opt_state, sys=bundle.run.system))(tp)
+    step = bundle.make_train_step()
+    tp, opt, m = step(tp, fp, opt, make_batch())
+    return ({k: float(v) for k, v in m.items()},
+            [np.asarray(x, np.float32) for x in tp])
+
+
+# ---------------------------------------------------------------------------
+# SystemConfig validation + prefetch_depth back-compat shim
+# ---------------------------------------------------------------------------
+
+def test_systemconfig_validation():
+    with pytest.raises(ValueError, match="device_cache_fraction"):
+        SystemConfig(device_cache_fraction=1.5)
+    with pytest.raises(ValueError, match="device_cache_fraction"):
+        SystemConfig(device_cache_fraction=-0.1)
+    with pytest.raises(ValueError, match="activation_policy"):
+        SystemConfig(activation_policy="bogus")
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        SystemConfig(prefetch_depth=-1)
+
+
+def test_prefetch_depth_legacy_shim():
+    """The legacy bool maps to depth 1; the `prefetch` read view stays
+    in sync (== prefetch_depth > 0); and because the bool is init-only
+    (never carried by replace()), an explicit prefetch=False reliably
+    disables the schedule even when a depth rides along."""
+    assert SystemConfig().prefetch_depth == 0
+    s = SystemConfig(prefetch=True)
+    assert s.prefetch_depth == 1 and s.prefetch
+    s = SystemConfig(prefetch_depth=3)
+    assert s.prefetch_depth == 3 and s.prefetch
+    assert s.replace(prefetch_depth=0).prefetch_depth == 0
+    assert not s.replace(prefetch_depth=0).prefetch
+    # the legacy-writer trap: toggling the bool off must actually
+    # disable, not be overridden by the carried depth
+    off = s.replace(prefetch=False)
+    assert off.prefetch_depth == 0 and not off.prefetch
+    on = SystemConfig().replace(prefetch=True)
+    assert on.prefetch_depth == 1 and on.prefetch
+    # an explicit bool wins over an explicit depth in one construction
+    assert SystemConfig(prefetch=False, prefetch_depth=2).prefetch_depth == 0
+    assert SystemConfig(prefetch=True, prefetch_depth=2).prefetch_depth == 2
+
+
+def test_strategy_stream_capabilities():
+    """max_prefetch_depth replaces the bare supports_prefetch flag (kept
+    as a derived view); the resolved depth clamps to the capability and
+    needs a pod axis; the async stream is gated the same way."""
+    class M3:
+        axis_names = ("pod", "data", "model")
+
+    class M2:
+        axis_names = ("data", "model")
+
+    deep = SystemConfig(prefetch_depth=64)
+    on = SystemConfig(async_grad_reduce=True)
+    for mode in ("zero3", "zeropp", "fcdp"):
+        s = get_strategy(mode)
+        assert s.supports_prefetch
+        assert s.prefetch_depth(deep, M3()) == s.max_prefetch_depth
+        assert s.prefetch_depth(deep, M2()) == 0
+        assert s.async_grad_reduce_active(on, M3())
+        assert not s.async_grad_reduce_active(on, M2())
+    for mode in ("mics", "hier"):
+        s = get_strategy(mode)
+        assert not s.supports_prefetch
+        assert s.max_prefetch_depth == 0
+        assert s.prefetch_depth(deep, M3()) == 0
+        assert not s.async_grad_reduce_active(on, M3())
+
+
+# ---------------------------------------------------------------------------
+# Serve-path prefetch: prefill/decode parity sequential vs depth-k
+# ---------------------------------------------------------------------------
+
+def _serve_logits(mesh3, depth):
+    """zeropp serving keeps frozen params pod-sharded, so the stateful
+    scan has a non-empty stage 1 to prefetch (fcdp's serve_frozen layout
+    is structurally sequential)."""
+    b = make_bundle(mesh3, cell=PREFILL, mode="zeropp",
+                    prefetch_depth=depth)
+    params = b.init_all_params(seed=0)
+    state = b.init_state(PREFILL)
+    rng = np.random.default_rng(1)
+    ids = jnp.asarray(rng.integers(1, DENSE.vocab_size, (8, 32)), jnp.int32)
+    logits, state = b.make_prefill_step()(params, ids, state)
+    bd = make_bundle(mesh3, cell=DECODE, mode="zeropp",
+                     prefetch_depth=depth)
+    tok = jnp.asarray(rng.integers(1, DENSE.vocab_size, (8, 1)), jnp.int32)
+    dec_logits, _ = bd.make_decode_step()(params, tok, state)
+    return (np.asarray(logits, np.float32),
+            np.asarray(dec_logits, np.float32))
+
+
+def test_serve_prefetch_parity(mesh3):
+    """Prefill and decode logits on a multi-pod mesh match between the
+    sequential and depth-k schedules (bf16 forward: tolerances absorb
+    fusion/reduction-order noise; top-1 tokens must agree)."""
+    seq_p, seq_d = _serve_logits(mesh3, depth=0)
+    pf_p, pf_d = _serve_logits(mesh3, depth=2)
+    for a, b in ((seq_p, pf_p), (seq_d, pf_d)):
+        np.testing.assert_allclose(a, b, atol=0.06, rtol=0.06)
+        assert (np.argmax(a, -1) == np.argmax(b, -1)).mean() > 0.95
+
+
+# ---------------------------------------------------------------------------
+# Async pod-axis gradient reduce (scheduler stream 2)
+# ---------------------------------------------------------------------------
+
+def test_async_grad_reduce_equivalence(mesh3):
+    """The pipelined reduce must not change the math: a microbatched
+    training step with the async stream on/off produces identical loss,
+    grad norm, and updated parameters."""
+    m_off, p_off = run_one_step(make_bundle(mesh3, microbatch=2))
+    m_on, p_on = run_one_step(make_bundle(mesh3, microbatch=2,
+                                          async_grad_reduce=True))
+    np.testing.assert_allclose(m_on["loss"], m_off["loss"], rtol=1e-4)
+    np.testing.assert_allclose(m_on["grad_norm"], m_off["grad_norm"],
+                               rtol=1e-3)
+    for a, b in zip(p_off, p_on):
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-3)
+
+
+def _collect(bundle):
+    from repro.launch.roofline import collect_collectives
+    step = bundle.make_train_step()
+    closed = step.trace(*bundle.train_input_sds()).jaxpr
+    sizes = {a: bundle.mi.size(a) for a in bundle.mi.axis_names}
+    return collect_collectives(closed, sizes)
+
+
+def test_async_grad_reduce_comm_structure(mesh3):
+    """The async stream moves the pod-axis reduce, it does not add any
+    traffic: per-step DCN all-gather and reduce-scatter volumes are
+    identical with the stream on/off under fcdp."""
+    c_off = _collect(make_bundle(mesh3, microbatch=2))
+    c_on = _collect(make_bundle(mesh3, microbatch=2,
+                                async_grad_reduce=True))
+    for key in ("all_gather/pod", "psum_scatter/pod"):
+        np.testing.assert_allclose(c_on.by_op_axis.get(key, 0),
+                                   c_off.by_op_axis.get(key, 0), rtol=1e-6)
+    np.testing.assert_allclose(c_on.by_op.get("psum_scatter", 0),
+                               c_off.by_op.get("psum_scatter", 0),
+                               rtol=1e-6)
+    np.testing.assert_allclose(c_on.dcn_bytes, c_off.dcn_bytes, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch-aware FCDP-Cache planner + analytic buffer accounting
+# ---------------------------------------------------------------------------
+
+def test_prefetch_buffer_accounting(mesh3):
+    """The analytic ring-buffer cost scales linearly with depth, and a
+    bundle whose plans have no stage 1 (serve_frozen fcdp) resolves to
+    depth 0 with zero buffer bytes."""
+    from repro.core.cache import cache_bytes_per_chip
+    a1 = cache_bytes_per_chip(make_bundle(mesh3, prefetch_depth=1))
+    a2 = cache_bytes_per_chip(make_bundle(mesh3, prefetch_depth=2))
+    assert a1["prefetch_depth"] == 1 and a2["prefetch_depth"] == 2
+    assert a1["prefetch_buffer_bytes_per_chip"] > 0
+    np.testing.assert_allclose(a2["prefetch_buffer_bytes_per_chip"],
+                               2 * a1["prefetch_buffer_bytes_per_chip"])
+    frozen = cache_bytes_per_chip(
+        make_bundle(mesh3, cell=DECODE, prefetch_depth=2))
+    assert frozen["prefetch_depth"] == 0
+    assert frozen["prefetch_buffer_bytes_per_chip"] == 0.0
+
+
+def test_async_buffer_accounting(mesh3):
+    """The async stream's resident stage-1 buffers (leaf-level gathered
+    param view + carried grad buffer) are reported only when the stream
+    is actually live for the run."""
+    from repro.core.cache import cache_bytes_per_chip
+    live = cache_bytes_per_chip(
+        make_bundle(mesh3, microbatch=2, async_grad_reduce=True))
+    assert live["async_buffer_bytes_per_chip"] > 0
+    # flag off, no accumulation, or an unwilling strategy -> 0
+    for b in (make_bundle(mesh3, microbatch=2),
+              make_bundle(mesh3, async_grad_reduce=True),
+              make_bundle(mesh3, mode="mics", microbatch=2,
+                          async_grad_reduce=True)):
+        assert cache_bytes_per_chip(b)["async_buffer_bytes_per_chip"] == 0.0
+
+
+def test_planner_demotes_depth_before_device_cache(mesh3):
+    """Over budget, the planner walks prefetch depth k -> 0 at the
+    fastest device fraction before touching the fraction itself (a
+    synthetic peak stands in for the compile measurement)."""
+    from repro.core.cache import MemoryPlanner
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8,
+                                        prefetch_depth=2),
+                    optimizer=OptimizerConfig(total_steps=4, warmup_steps=1))
+
+    class FakePeak(MemoryPlanner):
+        def __init__(self, fit_at, **kw):
+            super().__init__(**kw)
+            self.fit_at = fit_at
+
+        def _peak(self, bundle):
+            s = bundle.run.system
+            fits = (s.device_cache_fraction, s.prefetch_depth) == self.fit_at
+            return 0 if fits else (1 << 50)
+
+    plan = FakePeak(fit_at=(1.0, 0)).plan(run, mesh3, fractions=(1.0, 0.0))
+    assert plan.fits and plan.device_fraction == 1.0
+    assert plan.prefetch_depth == 0
+    assert [(i["device_fraction"], i["prefetch_depth"])
+            for i in plan.iterations] == [(1.0, 2), (1.0, 1), (1.0, 0)]
+    assert all("prefetch_buffer_bytes" in i for i in plan.iterations)
+
+    # a budget that fits at full depth keeps the ring
+    plan2 = FakePeak(fit_at=(1.0, 2)).plan(run, mesh3, fractions=(1.0, 0.0))
+    assert plan2.fits and plan2.prefetch_depth == 2
+
+    # with no prefetch configured the search degenerates to the old
+    # fraction walk (depth column pinned at 0)
+    run0 = run.replace(system=run.system.replace(prefetch_depth=0))
+    plan3 = FakePeak(fit_at=(0.0, 0)).plan(run0, mesh3,
+                                           fractions=(1.0, 0.0))
+    assert plan3.fits and plan3.device_fraction == 0.0
+    assert [i["prefetch_depth"] for i in plan3.iterations] == [0, 0]
+
+
+def test_roofline_per_depth_credit():
+    """The overlap credit is min(stage-1 DCN time, total compute) for
+    any depth >= 1 -- the shared DCN link can never hide more transfer
+    time than the step has compute, so the bandwidth model is
+    depth-invariant; what scales with depth is the ring's in-flight
+    byte accounting riding along in the report."""
+    from repro.launch.roofline import CollectiveStats, roofline_report
+
+    def rep(depth, flops):
+        stats = CollectiveStats()
+        stats.add("all_gather", "pod", 4e9, is_dcn=True)
+        stats.add("all_gather", "data", 8e9, is_dcn=False)
+        return roofline_report(flops, 1e12, stats, DENSE, CELL, 8,
+                               prefetch=depth, inflight_bytes=depth * 1e6)
+
+    stage1_t = 4e9 / 25e9
+    # comm-bound regime: credit saturates at the total compute term for
+    # every depth >= 1
+    lo = {d: rep(d, 1e13) for d in (0, 1, 2, 8)}
+    assert lo[0]["prefetch"]["depth"] == 0
+    assert lo[0]["prefetch"]["overlapped_s"] == 0
+    for d in (1, 2, 8):
+        assert lo[d]["prefetch"]["overlapped_s"] == pytest.approx(
+            lo[d]["compute_s"])
+        assert lo[d]["prefetch"]["overlapped_s"] <= lo[d]["compute_s"]
+        assert lo[d]["prefetch"]["inflight_stage1_bytes_per_chip"] == \
+            d * 1e6
+        assert (lo[d]["prefetch"]["collective_exposed_s"]
+                < lo[0]["collective_s"])
+    # compute-rich regime: the full stage-1 time hides at any depth
+    hi = rep(2, 1e15)
+    assert hi["prefetch"]["overlapped_s"] == pytest.approx(stage1_t)

@@ -78,15 +78,19 @@ GOLDEN_MULTIPOD = {
     ("zeropp", False): (("pod", "data"), ("pod",), ("data",), 1),
     ("fcdp", False): (("pod", "data"), ("pod",), ("data",), 1),
     ("mics", False): ("data", (), ("data",), 2),
+    # hier: params take the MiCS (pod-replicated) layout; only the
+    # OPTIMIZER state widens to ('data','pod') -- see test_hier_opt_spec
+    ("hier", False): ("data", (), ("data",), 2),
     # frozen: FCDP-Comm cached layout applies in fcdp only
     ("zero3", True): (("pod", "data"), ("pod",), ("data",), 1),
     ("zeropp", True): (("pod", "data"), ("pod",), ("data",), 1),
     ("fcdp", True): ("data", (), ("data",), 2),
     ("mics", True): ("data", (), ("data",), 2),
+    ("hier", True): ("data", (), ("data",), 2),
 }
 
 
-@pytest.mark.parametrize("mode", ["zero3", "zeropp", "fcdp", "mics"])
+@pytest.mark.parametrize("mode", ["zero3", "zeropp", "fcdp", "mics", "hier"])
 @pytest.mark.parametrize("frozen", [False, True])
 def test_golden_parity_multipod(mesh3, mode, frozen):
     strat = get_strategy(mode)
@@ -103,7 +107,7 @@ def test_golden_parity_multipod(mesh3, mode, frozen):
     assert plan.frozen == frozen
 
 
-@pytest.mark.parametrize("mode", ["zero3", "zeropp", "fcdp", "mics"])
+@pytest.mark.parametrize("mode", ["zero3", "zeropp", "fcdp", "mics", "hier"])
 def test_golden_parity_singlepod(mesh2, mode):
     """No pod axis: every strategy collapses to ('data',) storage with an
     empty stage 1 and the cache boundary after the full gather."""
@@ -128,13 +132,32 @@ def test_cache_placement_per_mode():
     assert get_strategy("zeropp").cache_placement == "device"
     assert get_strategy("fcdp").cache_placement == "host"
     assert get_strategy("mics").cache_placement == "regather"
+    assert get_strategy("hier").cache_placement == "regather"
 
 
 def test_device_cache_fraction_gating():
     # FCDP-Cache's tau fraction only applies under fcdp
     assert get_strategy("fcdp").device_cache_groups(8, 0.5) == 4
-    for mode in ("zero3", "zeropp", "mics"):
+    for mode in ("zero3", "zeropp", "mics", "hier"):
         assert get_strategy(mode).device_cache_groups(8, 0.5) == 0
+
+
+def test_hier_opt_spec(mesh3, mesh2):
+    """hier shards optimizer state wider than params: storage is the
+    MiCS (pod-replicated) layout, opt state goes over the full fsdp
+    product with the storage axes MAJOR in the tiling order (so the
+    widening reduce-scatter lands on the device's opt slice)."""
+    hier = get_strategy("hier")
+    assert hier.storage_spec(WDEF, mesh3) == P(None, "data", None)
+    assert hier.opt_spec(WDEF, mesh3) == P(None, ("data", "pod"), None)
+    # no pod axis: opt layout collapses to the param layout
+    assert hier.opt_spec(WDEF, mesh2) == hier.storage_spec(WDEF, mesh2)
+    # every other built-in keeps opt state at the (full-scope) param layout
+    import dataclasses
+    for mode in ("zero3", "zeropp", "fcdp", "mics"):
+        s = get_strategy(mode)
+        assert s.opt_spec(WDEF, mesh3) == s.storage_spec(
+            dataclasses.replace(WDEF, fsdp_scope="full"), mesh3)
 
 
 def test_legacy_module_level_helpers_delegate(mesh3):
@@ -221,6 +244,35 @@ def test_prefetch_numerical_equivalence(mesh3, mode):
         np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-3)
 
 
+def test_prefetch_depth_k_equivalence(mesh3):
+    """Deepening the ring buffer (k=2, k > num layer groups) must not
+    change the math either: train loss and updated params match the
+    depth-1 schedule."""
+    m_1, p_1 = run_one_step(make_bundle(mesh3, mode="fcdp",
+                                        prefetch_depth=1))
+    for depth in (2, 7):          # 7 > num_layers: the scheduler clamps
+        m_k, p_k = run_one_step(make_bundle(mesh3, mode="fcdp",
+                                            prefetch_depth=depth))
+        np.testing.assert_allclose(m_k["loss"], m_1["loss"], rtol=1e-4)
+        np.testing.assert_allclose(m_k["grad_norm"], m_1["grad_norm"],
+                                   rtol=1e-3)
+        for a, b in zip(p_1, p_k):
+            np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-3)
+
+
+def test_hier_step_matches_zero3(mesh3):
+    """Golden run for the hier strategy: one training step produces the
+    same loss/grad norm/updated params as zero3 (identical math, only
+    the storage/opt layouts and reduce schedule differ)."""
+    m_z, p_z = run_one_step(make_bundle(mesh3, mode="zero3"))
+    m_h, p_h = run_one_step(make_bundle(mesh3, mode="hier"))
+    np.testing.assert_allclose(m_h["loss"], m_z["loss"], rtol=1e-4)
+    np.testing.assert_allclose(m_h["grad_norm"], m_z["grad_norm"],
+                               rtol=1e-3)
+    for a, b in zip(p_z, p_h):
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-3)
+
+
 def _collect(bundle):
     from repro.launch.roofline import collect_collectives
     step = bundle.make_train_step()
@@ -231,17 +283,20 @@ def _collect(bundle):
 
 def test_prefetch_comm_structure(mesh3):
     """fcdp already re-runs only stage 2 in the backward, so prefetch
-    must leave its total DCN all-gather volume unchanged (the schedule
-    moves bytes earlier, it does not add any); the gradient
-    reduce-scatter volume is identical too. MiCS is untouched entirely."""
+    must leave its total DCN all-gather volume unchanged at EVERY ring
+    depth (the schedule moves bytes earlier, it does not add any); the
+    gradient reduce-scatter volume is identical too. MiCS is untouched
+    entirely."""
     fc_off = _collect(make_bundle(mesh3, mode="fcdp", prefetch=False))
-    fc_on = _collect(make_bundle(mesh3, mode="fcdp", prefetch=True))
-    np.testing.assert_allclose(
-        fc_on.by_op_axis.get("all_gather/pod", 0),
-        fc_off.by_op_axis.get("all_gather/pod", 0), rtol=1e-6)
-    np.testing.assert_allclose(
-        fc_on.by_op.get("psum_scatter", 0),
-        fc_off.by_op.get("psum_scatter", 0), rtol=1e-6)
+    for depth in (1, 2):
+        fc_on = _collect(make_bundle(mesh3, mode="fcdp",
+                                     prefetch_depth=depth))
+        np.testing.assert_allclose(
+            fc_on.by_op_axis.get("all_gather/pod", 0),
+            fc_off.by_op_axis.get("all_gather/pod", 0), rtol=1e-6)
+        np.testing.assert_allclose(
+            fc_on.by_op.get("psum_scatter", 0),
+            fc_off.by_op.get("psum_scatter", 0), rtol=1e-6)
 
     mi_off = _collect(make_bundle(mesh3, mode="mics", prefetch=False))
     mi_on = _collect(make_bundle(mesh3, mode="mics", prefetch=True))
