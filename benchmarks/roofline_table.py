@@ -1,6 +1,12 @@
-"""Render the §Roofline markdown table from results/dryrun_fcdp.json.
+"""Render the §Roofline markdown table from a dry-run JSON.
 
   PYTHONPATH=src python -m benchmarks.roofline_table [--multi-pod]
+  PYTHONPATH=src python -m benchmarks.roofline_table \
+      --json results/dryrun_fcdp_mixed.json     # mixed-layout dry-run
+
+The mode column renders per-tensor overrides as
+``fcdp+blocks.*.moe.we_*=mics`` so mixed layouts can sit in the same
+experiments table as the pure modes they are compared against.
 """
 import argparse
 import json
@@ -17,6 +23,14 @@ def fmt_s(x):
     return f"{x*1e6:.0f}us"
 
 
+def mode_label(cell) -> str:
+    """Mode axis value incl. per-tensor overrides: 'fcdp+glob=mics;...'"""
+    ov = cell.get("mode_overrides") or []
+    if not ov:
+        return cell.get("mode", "?")
+    return cell["mode"] + "+" + ";".join(f"{p}={m}" for p, m in ov)
+
+
 def render(multi_pod: bool, path=None):
     with open(path or RESULTS / "dryrun_fcdp.json") as f:
         cells = json.load(f)
@@ -29,19 +43,24 @@ def render(multi_pod: bool, path=None):
             continue
         rows.append((c["arch"], c["cell"], c, ""))
     mesh = "2x16x16 (512 chips)" if multi_pod else "16x16 (256 chips)"
-    out = [f"### Roofline — {mesh}, mode=fcdp, block_io activation policy",
+    modes = sorted({mode_label(c) for _, _, c, _ in rows if c})
+    out = [f"### Roofline — {mesh}, mode={'/'.join(modes) or 'fcdp'}, "
+           "block_io activation policy",
            "",
-           "| arch | cell | compute | memory | collective (ici+dcn) | "
-           "dominant | MODEL_FLOPS/HLO | roofline frac | HBM peak GiB |",
-           "|---|---|---|---|---|---|---|---|---|"]
+           "| arch | cell | mode | compute | memory | "
+           "collective (ici+dcn) | dominant | MODEL_FLOPS/HLO | "
+           "roofline frac | HBM peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for arch, cell, c, reason in rows:
         if c is None:
-            out.append(f"| {arch} | {cell} | — | — | — | {reason} | — | — | — |")
+            out.append(f"| {arch} | {cell} | — | — | — | — | {reason} "
+                       "| — | — | — |")
             continue
         r = c["roofline"]
         peak = c["memory"]["peak_est_bytes"] / 2**30
         out.append(
-            f"| {arch} | {cell} | {fmt_s(r['compute_s'])} | "
+            f"| {arch} | {cell} | {mode_label(c)} | "
+            f"{fmt_s(r['compute_s'])} | "
             f"{fmt_s(r['memory_s'])} | {fmt_s(r['ici_s'])}+{fmt_s(r['dcn_s'])} | "
             f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
             f"{r['roofline_fraction']:.3f} | {peak:.1f} |")
@@ -51,5 +70,9 @@ def render(multi_pod: bool, path=None):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="dry-run JSON to render (default "
+                         "results/dryrun_fcdp.json); point at a "
+                         "--mode-override dry-run for mixed layouts")
     a = ap.parse_args()
-    print(render(a.multi_pod))
+    print(render(a.multi_pod, path=a.json))

@@ -122,6 +122,113 @@ def bench_comm_smoke(rows):
     return {"smoke": True, "rows": out}
 
 
+# per-tensor strategy override rules applied on top of every bench
+# cell's mode (set from --mode-override): lets the experiments tables
+# compare mixed layouts (e.g. experts-on-mics) against the pure modes
+# on the same axis.
+_MODE_OVERRIDES = ()
+
+
+def bench_mixed_smoke(rows):
+    """--smoke mixed-mode dry-run: a toy MoE cell with the dense trunk
+    on fcdp, expert weights on mics, and the embedding on hier, walked
+    through the same StepBundle/cache-accounting/roofline pipeline. CI
+    uploads the per-group JSON (results/bench_smoke_mixed.json) next to
+    the prefetch-depth artifact; the assertions pin the composite
+    invariants the acceptance gates rely on (group sums == totals, the
+    mics group owns no ring bytes, the step trains)."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (ModelConfig, MoEConfig, OptimizerConfig,
+                                    RunConfig, ShapeCell, SystemConfig)
+    from repro.core.cache import cache_bytes_per_chip
+    from repro.core.engine import StepBundle
+    from repro.launch.mesh import make_mesh
+    from repro.launch.roofline import (collect_collectives,
+                                       flops_bytes_from_jaxpr,
+                                       roofline_report)
+    from repro.optim.adamw import init_opt_state
+    cfg = ModelConfig(name="smoke-moe", family="moe", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=256,
+                      moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64))
+    cell = ShapeCell("t", "train", 64, 8)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = (("blocks.*.moe.we_*", "mics"), ("embed", "hier"))
+    out = []
+    for label, overrides, depth in (("fcdp", (), 1),
+                                    ("mixed", rules, 1)):
+        sysc = SystemConfig(mode="fcdp", mode_overrides=overrides,
+                            min_shard_size=8, prefetch_depth=depth)
+        run = RunConfig(model=cfg, shape=cell, system=sysc,
+                        optimizer=OptimizerConfig(total_steps=4,
+                                                  warmup_steps=1))
+        b = StepBundle(run, mesh)
+        acct = cache_bytes_per_chip(b)
+        closed = b.make_train_step().trace(*b.train_input_sds()).jaxpr
+        sizes = {a: b.mi.size(a) for a in b.mi.axis_names}
+        stats = collect_collectives(closed, sizes)
+        flops, nbytes = flops_bytes_from_jaxpr(closed, 8)
+        rep = roofline_report(
+            flops, nbytes, stats, cfg, cell, 8,
+            prefetch=acct["prefetch_depth"],
+            inflight_bytes=acct["prefetch_buffer_bytes_per_chip"],
+            group_bytes=acct["by_group"])
+        # per-group sums must reproduce the flat totals exactly
+        groups = acct["by_group"]
+        assert abs(sum(g["cached_bytes_per_chip"] for g in groups.values())
+                   - acct["cached_bytes_per_chip"]) < 1e-6
+        assert abs(sum(g["prefetch_buffer_bytes_per_chip"]
+                       for g in groups.values())
+                   - acct["prefetch_buffer_bytes_per_chip"]) < 1e-6
+        out.append({"label": label, "mode": "fcdp",
+                    "mode_overrides": list(map(list, overrides)),
+                    "groups": groups,
+                    "prefetch_depth": acct["prefetch_depth"],
+                    "host_cache_bytes": acct["host_cache_bytes_per_chip"],
+                    "dcn_bytes": rep["dcn_bytes_per_chip"],
+                    "pod_ag_bytes": stats.by_op_axis.get(
+                        "all_gather/pod", 0.0),
+                    "ici_bytes": rep["ici_bytes_per_chip"]})
+        rows.append((f"mixed_smoke/{label}_dcn_MB", 0,
+                     rep["dcn_bytes_per_chip"] / 1e6))
+        rows.append((f"mixed_smoke/{label}_host_cache_MB", 0,
+                     acct["host_cache_bytes_per_chip"] / 1e6))
+    pure, mixed = out[0], out[1]
+    assert set(mixed["groups"]) == {"fcdp", "mics", "hier"}
+    # single-stage groups own no ring bytes; only the fcdp trunk streams
+    assert mixed["groups"]["mics"]["prefetch_buffer_bytes_per_chip"] == 0
+    assert mixed["groups"]["hier"]["prefetch_buffer_bytes_per_chip"] == 0
+    assert mixed["groups"]["fcdp"]["prefetch_buffer_bytes_per_chip"] > 0
+    # experts-on-mics retires exactly the experts' pod-axis all-gathers
+    # (their gradients cross pods as a psum instead, so TOTAL DCN volume
+    # is a wash vs fcdp's fwd-AG + reduce-scatter -- the mics trade is
+    # the schedule, not the byte count)
+    assert mixed["pod_ag_bytes"] < pure["pod_ag_bytes"]
+    assert mixed["dcn_bytes"] <= pure["dcn_bytes"] * 1.05
+    # the experts left the host-cache tier entirely
+    assert mixed["host_cache_bytes"] < pure["host_cache_bytes"]
+    # and one mixed train step actually runs
+    sysc = SystemConfig(mode="fcdp", mode_overrides=rules, min_shard_size=8)
+    run = RunConfig(model=cfg, shape=cell, system=sysc,
+                    optimizer=OptimizerConfig(total_steps=4, warmup_steps=1))
+    b = StepBundle(run, mesh)
+    params = b.init_all_params(seed=0)
+    tp, fp = b.split(params)
+    opt = jax.jit(functools.partial(init_opt_state, sys=sysc))(tp)
+    rng = np.random.default_rng(0)
+    batch = {"ids": jnp.asarray(rng.integers(1, 256, (8, 64)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(1, 256, (8, 64)), jnp.int32),
+             "mask": jnp.ones((8, 64), bool)}
+    _, _, m = b.make_train_step()(tp, fp, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    result = {"smoke": True, "loss": float(m["loss"]), "rows": out}
+    with open(RESULTS / "bench_smoke_mixed.json", "w") as f:
+        json.dump(result, f, indent=2, default=float)
+    return result
+
+
 def _cell(arch, cell, mode, multi_pod=True, overrides=None):
     from repro.launch.dryrun import dryrun_cell
     # paper-table benches compare modes on the sequential schedule:
@@ -129,7 +236,7 @@ def _cell(arch, cell, mode, multi_pod=True, overrides=None):
     # and shrink the baseline every table normalizes against
     return dryrun_cell(arch, cell, multi_pod, mode,
                        system_overrides=overrides, verbose=False,
-                       prefetch=False)
+                       prefetch=False, mode_overrides=_MODE_OVERRIDES)
 
 
 def bench_comm_volume(rows):
@@ -175,7 +282,7 @@ def bench_memory(rows):
     from repro.configs.base import RunConfig, SystemConfig, shape_cell
     from repro.configs.registry import get_config
     from repro.core.cache import cache_bytes_per_chip
-    from repro.core.stepfn import StepBundle
+    from repro.core.engine import StepBundle
     from repro.launch.mesh import make_production_mesh
     arch = "granite-3-8b"
     out = []
@@ -213,7 +320,7 @@ def bench_max_batch(rows):
     import dataclasses
     from repro.configs.base import RunConfig, SystemConfig, ShapeCell
     from repro.configs.registry import get_config
-    from repro.core.stepfn import StepBundle
+    from repro.core.engine import StepBundle
     from repro.launch.mesh import make_production_mesh
 
     HBM = 16 * 2**30
@@ -382,9 +489,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI path: kernel oracles + toy-mesh comm "
-                         "schema check only")
+                         "schema check + mixed-mode dry-run")
+    ap.add_argument("--mode-override", action="append", default=[],
+                    metavar="GLOB=MODE",
+                    help="per-tensor strategy override applied on top of "
+                         "every bench cell's mode (repeatable) -- compare "
+                         "mixed layouts against the pure-mode tables")
     args = ap.parse_args()
+    if args.mode_override:
+        from repro.core.strategy import parse_mode_override
+        global _MODE_OVERRIDES
+        _MODE_OVERRIDES = tuple(parse_mode_override(s)
+                                for s in args.mode_override)
     benches = ([("comm_smoke", bench_comm_smoke),
+                ("mixed_smoke", bench_mixed_smoke),
                 ("kernels", bench_kernels)]
                if args.smoke else BENCHES)
     RESULTS.mkdir(exist_ok=True)

@@ -20,7 +20,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
                                 SystemConfig)
 from repro.configs.registry import get_smoke_config
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
 from repro.launch.mesh import make_mesh
 from repro.optim.adamw import init_opt_state

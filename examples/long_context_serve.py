@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import RunConfig, ShapeCell, SystemConfig
 from repro.configs.registry import get_smoke_config
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.launch.mesh import make_mesh
 
 

@@ -18,7 +18,7 @@ import jax
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
                                 SystemConfig)
 from repro.configs.registry import get_smoke_config
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
 from repro.launch.mesh import make_mesh
 from repro.launch.roofline import collect_collectives

@@ -120,14 +120,26 @@ class SystemConfig:
       fcdp    - host-cached intra shard, intra-only bwd AG     (the paper)
       mics    - subgroup (pod-local) sharding, no cross-pod AG (MiCS analog)
       hier    - pod-local param sharding, optimizer state sharded over
-                ('pod','data') (hierarchical partitioning, Xu et al.)
+                ('data','pod') (hierarchical partitioning, Xu et al.)
 
     Validated at construction: device_cache_fraction must lie in [0, 1],
-    activation_policy must be a known policy, and prefetch_depth must be
+    activation_policy must be a known policy, prefetch_depth must be
     a non-negative int (None derives it from the legacy `prefetch`
-    bool). `mode` itself is validated at strategy resolution.
+    bool), and every mode_overrides rule must be well-formed and name a
+    registered strategy. `mode` itself is validated at strategy
+    resolution.
     """
     mode: str = "fcdp"
+    # Per-tensor strategy overrides: ordered (path-glob, mode) rules
+    # matched (fnmatch, first match wins) against the label_tree dotted
+    # path of each ParamDef at StepBundle/model construction -- e.g.
+    # (("blocks.*.moe.we_*", "mics"), ("embed", "hier")) keeps the dense
+    # trunk on `mode` while experts ride MiCS pod-replication and the
+    # embedding shards hierarchically. An explicit ParamDef.strategy tag
+    # beats every rule; a rule that is the first match for zero params
+    # raises at resolution. 'pattern=mode' strings are accepted and
+    # canonicalized to pairs (the CLI --mode-override form).
+    mode_overrides: Tuple[Tuple[str, str], ...] = ()
     # FCDP-Cache: fraction of layers allowed to keep the cached shard on
     # device (planner output; tau in the paper). 0.0 -> all host, 1.0 -> all device.
     device_cache_fraction: float = 0.0
@@ -201,6 +213,16 @@ class SystemConfig:
     moe_serve_sharded: bool = False
 
     def __post_init__(self, prefetch):
+        if self.mode_overrides:
+            # canonicalize + validate (unknown strategy name / malformed
+            # rule raises naming the offending rule); zero-match
+            # patterns raise later, at per-leaf resolution, where the
+            # ParamDef tree exists. Deferred import: the strategy
+            # registry pulls in jax, which plain config construction
+            # should not require.
+            from repro.core.strategy import normalize_mode_overrides
+            object.__setattr__(self, "mode_overrides",
+                               normalize_mode_overrides(self.mode_overrides))
         if not 0.0 <= self.device_cache_fraction <= 1.0:
             raise ValueError(
                 "device_cache_fraction must be in [0, 1], got "

@@ -23,21 +23,31 @@ from typing import Dict, List, Optional
 
 import jax
 
-from repro.core.schedule import (GatherScheduler, async_buffer_bytes,
+from repro.core.schedule import (GatherScheduler,
+                                 async_buffer_bytes_by_group,
                                  async_reduce_enabled,
-                                 prefetch_buffer_bytes)
-from repro.core.strategy import GatherPlan, resolve_strategy
+                                 prefetch_buffer_bytes_by_group)
+from repro.core.strategy import GatherPlan, get_strategy, leaf_group
 
 HBM_PER_CHIP = 16 * 2**30          # v5e
 
 
 def cache_bytes_per_chip(bundle) -> Dict[str, float]:
-    """Analytic size of the FCDP cache tier, per chip.
+    """Analytic size of the FCDP cache tier, per chip, split by
+    resolved strategy group.
 
     cache_after=1 (multi-pod): the stage-1 (intra-pod) shard, i.e.
     param_bytes / (data*tp) per chip -- summed = W_bf16/(data*tp)*layers'
     worth = W/(pod-degree) per pod total, the paper's 'W per node'.
     cache_after=2 (single-pod): the fully gathered TP-local weight.
+
+    ``by_group`` maps each resolved strategy group (under per-tensor
+    mixed sharding a model holds several) to its analytic cache-tier
+    size, cache placement, and its share of the in-flight ring / async
+    buffers; the flat totals are the sums over groups. The headline
+    ``host_cache_bytes_per_chip`` counts HOST-placed groups only (what
+    actually lands in pinned host memory -- regather groups cache
+    nothing, device groups pay HBM and show up in the compiled peak).
 
     Also reports the streaming gather scheduler's in-flight stage-1 ring
     buffers (k x one layer group's stage-1 bytes) and, when the async
@@ -50,23 +60,43 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
     strategy = bundle.strategy
     plans = bundle.plan_leaves
     defs = bundle.def_leaves
-    host = 0.0
+    by_group: Dict[str, Dict[str, float]] = {}
     for d, p in zip(defs, plans):
         if not isinstance(p, GatherPlan):
             continue
-        host += strategy.cached_bytes_for(d, p, mi)
+        g = leaf_group(strategy, d)
+        gb = by_group.setdefault(
+            g, {"cached_bytes_per_chip": 0.0,
+                "placement": get_strategy(g).cache_placement,
+                "n_leaves": 0,
+                "prefetch_buffer_bytes_per_chip": 0.0,
+                "async_buffer_bytes_per_chip": 0.0})
+        gb["cached_bytes_per_chip"] += strategy.cached_bytes_for(d, p, mi)
+        gb["n_leaves"] += 1
     # the depth the scheduler actually resolves for this bundle (0 when
     # no plan has a non-empty stage 1, e.g. serve_frozen fcdp layouts)
     depth = GatherScheduler(strategy, bundle.run.system, mi,
                             bundle.model.plans).depth
-    async_bytes = (async_buffer_bytes(strategy, defs, plans, mi)
-                   if async_reduce_enabled(bundle.run, strategy, mi)
-                   else 0.0)
+    for g, b in prefetch_buffer_bytes_by_group(
+            strategy, defs, plans, mi, depth).items():
+        by_group[g]["prefetch_buffer_bytes_per_chip"] = b
+    if async_reduce_enabled(bundle.run, strategy, mi):
+        for g, b in async_buffer_bytes_by_group(
+                strategy, defs, plans, mi).items():
+            by_group[g]["async_buffer_bytes_per_chip"] = b
+    host = sum(gb["cached_bytes_per_chip"] for gb in by_group.values()
+               if gb["placement"] == "host")
     return {"host_cache_bytes_per_chip": host,
+            "cached_bytes_per_chip": sum(
+                gb["cached_bytes_per_chip"] for gb in by_group.values()),
             "prefetch_depth": depth,
-            "prefetch_buffer_bytes_per_chip": prefetch_buffer_bytes(
-                strategy, defs, plans, mi, depth),
-            "async_buffer_bytes_per_chip": async_bytes}
+            "prefetch_buffer_bytes_per_chip": sum(
+                gb["prefetch_buffer_bytes_per_chip"]
+                for gb in by_group.values()),
+            "async_buffer_bytes_per_chip": sum(
+                gb["async_buffer_bytes_per_chip"]
+                for gb in by_group.values()),
+            "by_group": by_group}
 
 
 @dataclass
@@ -113,7 +143,8 @@ class MemoryPlanner:
                   "prefetch_buffer_bytes_per_chip"],
               "async_buffer_bytes": acct["async_buffer_bytes_per_chip"],
               "peak_bytes": peak, "host_bytes": acct[
-                  "host_cache_bytes_per_chip"]}
+                  "host_cache_bytes_per_chip"],
+              "by_group": acct["by_group"]}
         iters.append(it)
         return it
 
@@ -126,9 +157,19 @@ class MemoryPlanner:
         the fastest device fraction -- each step frees one in-flight
         stage-1 ring buffer and costs only overlap), then device-cache
         fractions high -> low, then the activation-remat (block_io)
-        fallback, then declare regather-only."""
-        k0 = resolve_strategy(run.system.mode).prefetch_depth(
-            run.system, mesh)
+        fallback, then declare regather-only.
+
+        Each demotion acts on the groups it can act on (per-tensor mixed
+        sharding): a depth step shrinks only the streaming groups' ring
+        slots, a fraction step promotes/demotes only the host-placed
+        group's segments; every iteration records the per-group byte
+        split so the search is auditable group by group."""
+        # the depth the run's own (possibly composite) strategy resolves
+        # to -- the per-leaf assignment lives on the bundle's def tree,
+        # so probe one bundle rather than re-deriving from the mode name
+        from repro.core.engine import StepBundle
+        probe = StepBundle(run, mesh)
+        k0 = probe.strategy.prefetch_depth(run.system, probe.mi)
         attempts = ([(fractions[0], d) for d in range(k0, 0, -1)]
                     + [(f, 0) for f in fractions])
         iters: List[Dict] = []

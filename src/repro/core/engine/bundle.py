@@ -14,7 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import RunConfig, ShapeCell
 from repro.core import peft as peft_mod
 from repro.core.partition import is_def, init_params, label_tree
-from repro.core.strategy import GatherPlan, get_strategy, spec_axes
+from repro.core.strategy import GatherPlan, resolve_strategies, spec_axes
 from repro.models.common import MeshInfo
 from repro.models.registry import build_model
 
@@ -22,8 +22,13 @@ from repro.models.registry import build_model
 class StepBundle:
     """Everything needed to lower/run one (arch x shape x system) cell.
 
-    Resolves ``SystemConfig.mode`` to a ShardingStrategy exactly once;
-    every spec/plan derivation below consumes the strategy object.
+    The per-leaf strategy assignment (``ParamDef.strategy`` tag >
+    ``SystemConfig.mode_overrides`` rule > ``SystemConfig.mode``) is
+    resolved exactly once -- at model construction, and again here only
+    when the PEFT/serve classification changes the def tree -- via
+    ``core.strategy.resolve_strategies``; every spec/plan derivation
+    below consumes the resolved strategy object (a plain singleton for
+    uniform configs, a ``CompositeStrategy`` for mixed ones).
     """
 
     def __init__(self, run: RunConfig, mesh):
@@ -31,7 +36,6 @@ class StepBundle:
         self.mesh = mesh
         self.mi = MeshInfo.from_mesh(mesh)
         cfg, sys = run.model, run.system
-        self.strategy = get_strategy(sys.mode)
         self.model = build_model(cfg, sys, mesh)
         defs = self.model.defs
         if sys.peft:
@@ -40,11 +44,15 @@ class StepBundle:
             # serving: all weights frozen -> FCDP-Comm cached layout
             defs = peft_mod.freeze_all(defs)
         if defs is not self.model.defs:
+            # injected (LoRA) or reclassified (frozen) leaves: re-label
+            # and re-resolve the per-leaf strategies, then rebuild plans
+            defs, strategy = resolve_strategies(sys, label_tree(defs))
             self.model._defs = defs
-            self.model._plans = self.strategy.plan_tree(
+            self.model.strategy = strategy
+            self.model._plans = strategy.plan_tree(
                 defs, mesh, sys.min_shard_size,
                 compress_bwd=(sys.grad_compress == "int8_pod"))
-        self.model._defs = label_tree(self.model.defs)
+        self.strategy = self.model.strategy
         self.defs = self.model.defs
         self.def_leaves, self.treedef = jax.tree.flatten(
             self.defs, is_leaf=is_def)
@@ -61,7 +69,7 @@ class StepBundle:
         # Optimizer-state layout may be wider than the param layout:
         # ZeRO-2-for-experts keeps 'inter_only' (weight-resident) params
         # pod-sharded with fully sharded opt state, and the hier strategy
-        # shards opt state over ('pod','data') while params stay
+        # shards opt state over ('data','pod') while params stay
         # intra-pod. engine/train.py reduce-scatters grads over the
         # widening axes before the update and gathers the updated shard
         # back once per step.

@@ -1,5 +1,11 @@
 """Serve-step builders (prefill / decode) and the decode-state
-PartitionSpec derivations they share with the dry-run."""
+PartitionSpec derivations they share with the dry-run.
+
+Parameter layouts arrive per leaf (``bundle.leaf_specs``), so a served
+model may mix strategy groups (per-tensor mixed sharding) -- e.g.
+sharded-MoE decode against mics-group expert shards while the dense
+trunk serves from the fcdp frozen layout; the scan-level gather
+schedule is the GatherScheduler's job either way."""
 from __future__ import annotations
 
 from typing import Tuple

@@ -3,6 +3,16 @@
 ZeRO shards. Consumes a StepBundle whose strategy already fixed the
 storage layout and gather schedule.
 
+Everything here is PER LEAF, so per-tensor mixed sharding
+(CompositeStrategy) needs no special casing: the opt-widening
+reduce-scatter/all-gather pair fires for exactly the leaves whose opt
+spec is wider than their storage spec (hier embeddings, ZeRO-2-for-
+experts), the pre-VMA gradient psums cover exactly the leaves stored
+replicated over some axes (mics/hier groups, frozen layouts), and the
+async reduce stream defers exactly the leaves with a non-empty stage 1
+(the streaming groups) -- single-stage groups' reduces pass through
+untouched.
+
 Two gradient-reduce schedules exist on the accumulation path:
 
   sequential (default): each microbatch's backward contains the full
@@ -62,7 +72,7 @@ def build_train_step(bundle):
     cell = run.shape
     bspecs = bundle.batch_spec(cell)
     # Optimizer state wider than param storage (ZeRO-2-for-experts,
-    # hier's ('pod','data') opt sharding): grads get a reduce-scatter
+    # hier's ('data','pod') opt sharding): grads get a reduce-scatter
     # over the widening axes before the update, updated shards get one
     # all-gather back per step.
     widen = {}

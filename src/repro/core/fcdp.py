@@ -56,6 +56,18 @@ FULL_NAME = "fcdp_full"
 ACT_NAME = "act_ckpt"
 
 
+def cache_name(plan: GatherPlan) -> str:
+    """Placement-suffixed checkpoint name of one plan's cache boundary.
+
+    The placement travels in the name (``fcdp_cache:host`` etc.) so ONE
+    remat policy can serve a layer body whose leaves belong to different
+    strategy groups (per-tensor mixed sharding): an fcdp-group weight
+    offloads its stage-1 cache to pinned host while a mics-group expert
+    in the same body recomputes its gather, without the policy knowing
+    which strategy produced which mark."""
+    return f"{CACHE_NAME}:{plan.placement}"
+
+
 def make_gather_plan(pdef: ParamDef, mesh, mode,
                      min_shard_size: int = 0,
                      compress_bwd: bool = False) -> GatherPlan:
@@ -111,11 +123,11 @@ def gather_stage2(w: jax.Array, plan: GatherPlan) -> jax.Array:
     if not plan.is_gathered:
         return w
     if plan.cache_after == 1:
-        w = checkpoint_name(w, CACHE_NAME)
+        w = checkpoint_name(w, cache_name(plan))
     if plan.intra_axes:
         w = _ag_fn(plan)(w, plan.intra_axes, plan.fsdp_dim)
     if plan.cache_after == 2:
-        w = checkpoint_name(w, CACHE_NAME)
+        w = checkpoint_name(w, cache_name(plan))
     return checkpoint_name(w, FULL_NAME)
 
 
@@ -132,13 +144,21 @@ def gather_param(w: jax.Array, plan: GatherPlan) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def make_remat_policy(cache_placement: str, activation_policy: str = "save_all",
-                      host_offload: bool = True):
+                      host_offload: bool = True,
+                      promote_to_device: bool = False):
     """Build a jax.checkpoint policy.
 
-    cache_placement: 'device' | 'host' | 'regather'
+    cache_placement: 'device' | 'host' | 'regather' -- the fallback for
+        legacy unsuffixed cache marks; plans emitted by the strategies
+        carry their own placement in the mark name (``fcdp_cache:host``)
+        so a mixed-strategy layer body needs only this one policy.
     activation_policy: 'save_all' (paper-faithful, torch-like) |
                        'block_io' (full activation remat) |
                        'offload_acts' (named activations offloaded)
+    promote_to_device: FCDP-Cache's tau split (leading layer segments
+        keep the cached shard in HBM): promotes HOST-placed caches to
+        device and leaves regather/device groups untouched, so the
+        per-segment promotion is safe on mixed-strategy bodies.
     """
     if not _HAVE_POLICY_INTERNALS:  # pragma: no cover
         return jax.checkpoint_policies.nothing_saveable
@@ -164,10 +184,14 @@ def make_remat_policy(cache_placement: str, activation_policy: str = "save_all",
             return pe.Recompute
         if prim is name_p:
             name = params.get("name")
-            if name == CACHE_NAME:
-                if cache_placement == "device":
+            if name == CACHE_NAME or (name or "").startswith(CACHE_NAME + ":"):
+                placement = (name.split(":", 1)[1] if ":" in name
+                             else cache_placement)
+                if promote_to_device and placement == "host":
+                    placement = "device"
+                if placement == "device":
                     return pe.Saveable
-                if cache_placement == "host":
+                if placement == "host":
                     if host_offload:
                         return pe.Offloadable(src="device", dst="pinned_host")
                     return pe.Saveable
@@ -196,8 +220,13 @@ def cache_placement_for_mode(mode) -> str:
 def checkpoint_layer(fn, mode, activation_policy: str = "save_all",
                      host_offload: bool = True, placement: Optional[str] = None):
     """Wrap a layer-apply function with the FCDP remat policy.
-    ``mode`` is a strategy name or ShardingStrategy object."""
+
+    ``mode`` is a strategy name or ShardingStrategy object (composites
+    welcome: each plan's cache mark carries its own placement).
+    ``placement='device'`` is the FCDP-Cache segment promotion -- it
+    lifts host-placed caches to HBM and leaves other groups alone."""
     pol = make_remat_policy(
-        placement or resolve_strategy(mode).cache_placement,
-        activation_policy, host_offload)
+        resolve_strategy(mode).cache_placement,
+        activation_policy, host_offload,
+        promote_to_device=(placement == "device"))
     return jax.checkpoint(fn, policy=pol)

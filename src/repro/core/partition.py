@@ -8,12 +8,16 @@ dimension with a logical role:
   'tp'    - tensor/expert-parallel dimension (owned shard, never gathered)
   None    - unsharded
 
-WHICH mesh axes the fsdp dim shards over is a per-mode decision owned by
-``repro.core.strategy`` (full ('pod','data') sharding for the zero3-family
-strategies, pod-replicated ('data',) for MiCS and for frozen FCDP-Comm
-params). The module-level helpers here accept a mode name or a resolved
-``ShardingStrategy`` and delegate; on the single-pod mesh ('data','model')
-there is no pod axis and the fsdp axes collapse to ('data',).
+WHICH mesh axes the fsdp dim shards over is a per-tensor decision owned
+by ``repro.core.strategy`` (full ('data','pod') sharding for the
+zero3-family strategies -- intra-major, so the stage-1-then-stage-2
+gather reconstructs true global order -- pod-replicated ('data',) for
+MiCS and for frozen FCDP-Comm params), resolved per ParamDef via
+``strategy.resolve_strategies`` (explicit ``ParamDef.strategy`` tag >
+``SystemConfig.mode_overrides`` rule > ``mode``). The module-level
+helpers here accept a mode name or a resolved ``ShardingStrategy`` and
+delegate; on the single-pod mesh ('data','model') there is no pod axis
+and the fsdp axes collapse to ('data',).
 """
 from __future__ import annotations
 
@@ -44,6 +48,13 @@ class ParamDef:
     # tensors whose per-step gather volume exceeds their resident size
     # (MoE expert weights; beyond-paper, see EXPERIMENTS.md SSPerf)
     fsdp_scope: str = "full"      # full | inter_only
+    # per-tensor sharding strategy. None resolves through
+    # SystemConfig.mode_overrides / SystemConfig.mode at
+    # StepBundle/model construction (core.strategy.resolve_strategies);
+    # an explicit name here wins over both. After resolution every leaf
+    # carries its resolved name, which is the dispatch/accounting key
+    # for the CompositeStrategy facade and the per-group planner split.
+    strategy: Optional[str] = None
 
     def __post_init__(self):
         assert len(self.shape) == len(self.dims), (self.shape, self.dims)

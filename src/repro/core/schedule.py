@@ -63,7 +63,7 @@ import jax.numpy as jnp
 
 from repro.core.fcdp import (_ag_fn, gather_param, gather_stage1,
                              gather_stage2)
-from repro.core.strategy import GatherPlan
+from repro.core.strategy import GatherPlan, leaf_group
 
 _is_plan = lambda x: isinstance(x, GatherPlan)  # noqa: E731
 
@@ -80,6 +80,14 @@ class GatherScheduler:
                layer i+k's stage-1 (DCN) gather while computing layer i
                from the oldest slot via stage 2 only.
 
+    The ring is keyed by resolved strategy group: only leaves whose
+    plan has a non-empty stage 1 (the streaming groups) ride the k ring
+    slots; leaves of single-stage groups (mics/hier/frozen layouts,
+    replicated tensors -- under per-tensor mixed sharding these coexist
+    with streaming leaves in one scan) are sliced at the current step
+    and gathered in place, so the carry holds exactly the buffers
+    ``prefetch_buffer_bytes`` accounts for.
+
     ``enabled=False`` forces the sequential schedule regardless of
     config (used by the gather-free sharded-MoE decode path, whose raw
     expert shards must not be pre-gathered).
@@ -89,16 +97,11 @@ class GatherScheduler:
                  enabled: bool = True):
         self.strategy = strategy
         self.plans = plans
-        leaves = jax.tree.leaves(plans, is_leaf=_is_plan)
-        prefetchable = any(p.prefetchable for p in leaves if _is_plan(p))
+        self.plan_leaves = jax.tree.leaves(plans, is_leaf=_is_plan)
+        prefetchable = any(p.prefetchable for p in self.plan_leaves
+                           if _is_plan(p))
         self.depth = (strategy.prefetch_depth(sys, mesh_like)
                       if (enabled and prefetchable) else 0)
-
-    # -- stage-1 issue --------------------------------------------------------
-    def _stage1(self, params_slice):
-        """Issue the stage-1 (inter/DCN) gathers for one layer group."""
-        return jax.tree.map(gather_stage1, params_slice, self.plans,
-                            is_leaf=_is_plan)
 
     # -- entry point ----------------------------------------------------------
     def run(self, make_body: Callable, wrap: Callable, stacked_params,
@@ -145,30 +148,59 @@ class GatherScheduler:
     def _run_prefetch(self, make_body, wrap, stacked_params, x, aux0,
                       stacked_state, n: int, k: int):
         wrapped = wrap(make_body(gather_stage2))
+        # partition the leaves by stream group: only plans with a
+        # non-empty stage 1 ride the ring; the rest (single-stage
+        # strategy groups under mixed sharding, frozen layouts, small
+        # replicated tensors) are sliced at the step that consumes them.
+        # gather_stage2 is the correct reconstruction for BOTH: stage 1
+        # is the identity on every non-ring plan.
+        leaves, treedef = jax.tree.flatten(stacked_params)
+        ring_ix = [i for i, p in enumerate(self.plan_leaves)
+                   if _is_plan(p) and p.prefetchable]
+        dir_ix = [i for i in range(len(leaves)) if i not in set(ring_ix)]
+        ring_plans = [self.plan_leaves[i] for i in ring_ix]
+
+        def stage1_flat(ws):
+            return [gather_stage1(w, p) for w, p in zip(ws, ring_plans)]
+
+        def merge(ring_slot, dir_slice):
+            out = [None] * len(leaves)
+            for j, i in enumerate(ring_ix):
+                out[i] = ring_slot[j]
+            for j, i in enumerate(dir_ix):
+                out[i] = dir_slice[j]
+            return jax.tree.unflatten(treedef, out)
+
         # prologue: fill the ring with layers 0..k-1's stage-1 caches
-        ring0 = tuple(
-            self._stage1(jax.tree.map(lambda a, i=i: a[i], stacked_params))
-            for i in range(k))
-        rest = jax.tree.map(lambda a: a[k:], stacked_params)
+        ring0 = tuple(stage1_flat([leaves[i][j] for i in ring_ix])
+                      for j in range(k))
+        # step i consumes ring slot i and issues layer i+k's stage 1:
+        # ring leaves scan over slices k..n-1, direct leaves over 0..n-k-1
+        ring_rest = [leaves[i][k:] for i in ring_ix]
+        dir_lead = [leaves[i][:n - k] for i in dir_ix]
+
+        def dir_tail(j):
+            return [leaves[i][n - k + j] for i in dir_ix]
 
         if stacked_state is not None:
             lead_state = jax.tree.map(lambda a: a[:n - k], stacked_state)
 
             def body(carry, inp):
                 x, aux, ring = carry
-                slice_ahead, state_slice = inp
+                ahead, cur_dir, state_slice = inp
                 # issue layer i+k's stage-1 (DCN) gather: independent of
                 # layer i's compute below, so the scheduler overlaps them
-                cache_next = self._stage1(slice_ahead)
-                x, new_state, a = wrapped(x, ring[0], state_slice)
+                cache_next = stage1_flat(ahead)
+                x, new_state, a = wrapped(x, merge(ring[0], cur_dir),
+                                          state_slice)
                 return (x, aux + a, ring[1:] + (cache_next,)), new_state
             (x, aux, ring), new_lead = jax.lax.scan(
-                body, (x, aux0, ring0), (rest, lead_state))
+                body, (x, aux0, ring0), (ring_rest, dir_lead, lead_state))
             # epilogue: drain the ring against the last k state slices
             tails = []
             for j in range(k):
                 st = jax.tree.map(lambda a, i=n - k + j: a[i], stacked_state)
-                x, st_new, a = wrapped(x, ring[j], st)
+                x, st_new, a = wrapped(x, merge(ring[j], dir_tail(j)), st)
                 aux = aux + a
                 tails.append(st_new)
             tail = jax.tree.map(lambda *xs: jnp.stack(xs), *tails)
@@ -176,14 +208,16 @@ class GatherScheduler:
                 lambda a, b: jnp.concatenate([a, b], axis=0), new_lead, tail)
             return x, new_state, aux
 
-        def body(carry, slice_ahead):
+        def body(carry, inp):
             x, aux, ring = carry
-            cache_next = self._stage1(slice_ahead)
-            x, _, a = wrapped(x, ring[0], None)
+            ahead, cur_dir = inp
+            cache_next = stage1_flat(ahead)
+            x, _, a = wrapped(x, merge(ring[0], cur_dir), None)
             return (x, aux + a, ring[1:] + (cache_next,)), None
-        (x, aux, ring), _ = jax.lax.scan(body, (x, aux0, ring0), rest)
+        (x, aux, ring), _ = jax.lax.scan(body, (x, aux0, ring0),
+                                         (ring_rest, dir_lead))
         for j in range(k):                    # epilogue: drain the ring
-            x, _, a = wrapped(x, ring[j], None)
+            x, _, a = wrapped(x, merge(ring[j], dir_tail(j)), None)
             aux = aux + a
         return x, None, aux
 
@@ -238,21 +272,51 @@ def async_reduce_enabled(run, strategy, mi) -> bool:
             and strategy.async_grad_reduce_active(sys, mi))
 
 
+def async_buffer_bytes_by_group(strategy, def_leaves, plan_leaves,
+                                mi) -> dict:
+    """Per-strategy-group split of :func:`async_buffer_bytes`."""
+    out: dict = {}
+    for d, p in zip(def_leaves, plan_leaves):
+        if not (_is_plan(p) and p.is_gathered and p.inter_axes):
+            continue
+        view = strategy.cached_bytes_for(d, p, mi)
+        total = view                         # gathered param view
+        if not d.frozen:
+            total += view                    # in-flight grad buffer
+        g = leaf_group(strategy, d)
+        out[g] = out.get(g, 0.0) + total
+    return out
+
+
 def async_buffer_bytes(strategy, def_leaves, plan_leaves, mi) -> float:
     """Per-chip HBM bytes the async grad-reduce stream keeps resident:
     the stage-1-gathered view of EVERY leaf with a non-empty stage 1
     (the microbatch loss consumes pre-gathered params at leaf level
     rather than gathering per layer inside the scan) plus the carried
-    stage-1-level gradient buffer for the trainable leaves."""
-    total = 0.0
+    stage-1-level gradient buffer for the trainable leaves. Only the
+    streaming strategy groups contribute (single-stage groups under
+    mixed sharding defer nothing)."""
+    return sum(async_buffer_bytes_by_group(
+        strategy, def_leaves, plan_leaves, mi).values())
+
+
+def prefetch_buffer_bytes_by_group(strategy, def_leaves, plan_leaves, mi,
+                                   depth: int) -> dict:
+    """Per-strategy-group split of :func:`prefetch_buffer_bytes`."""
+    out: dict = {}
+    if depth <= 0:
+        return out
     for d, p in zip(def_leaves, plan_leaves):
-        if not (_is_plan(p) and p.is_gathered and p.inter_axes):
+        if not (_is_plan(p) and p.prefetchable):
             continue
-        view = strategy.cached_bytes_for(d, p, mi)
-        total += view                        # gathered param view
-        if not d.frozen:
-            total += view                    # in-flight grad buffer
-    return total
+        if "stack" not in d.dims:
+            continue
+        n = d.shape[d.dims.index("stack")]
+        g = leaf_group(strategy, d)
+        out[g] = (out.get(g, 0.0)
+                  + float(depth) * strategy.cached_bytes_for(d, p, mi)
+                  / max(n, 1))
+    return out
 
 
 def prefetch_buffer_bytes(strategy, def_leaves, plan_leaves, mi,
@@ -262,17 +326,9 @@ def prefetch_buffer_bytes(strategy, def_leaves, plan_leaves, mi,
     One ring slot holds one layer group's stage-1 caches: the per-leaf
     stage-1 shard size (strategy.cached_bytes_for, cache_after == 1)
     divided by that leaf's stack length. Leaves without a stage 1
-    (frozen layouts, replicated tensors) or outside the scan contribute
-    nothing.
+    (single-stage strategy groups, frozen layouts, replicated tensors)
+    or outside the scan contribute nothing -- since the scheduler keys
+    its ring by stream group, this is exactly what the scan carries.
     """
-    if depth <= 0:
-        return 0.0
-    per_group = 0.0
-    for d, p in zip(def_leaves, plan_leaves):
-        if not (_is_plan(p) and p.prefetchable):
-            continue
-        if "stack" not in d.dims:
-            continue
-        n = d.shape[d.dims.index("stack")]
-        per_group += strategy.cached_bytes_for(d, p, mi) / max(n, 1)
-    return float(depth) * per_group
+    return sum(prefetch_buffer_bytes_by_group(
+        strategy, def_leaves, plan_leaves, mi, depth).values())

@@ -17,29 +17,37 @@ re-runs. A ``ShardingStrategy`` centralizes every decision a mode makes:
   opt layout          optimizer-state sharding (may be wider than params)
   byte accounting     analytic cache/comm sizes for the planner/roofline
 
-``SystemConfig.mode`` is resolved to a strategy object exactly once (at
-``StepBundle``/model construction) via :func:`get_strategy`; no other
-module compares mode strings.
+``SystemConfig.mode`` is resolved exactly once (at ``StepBundle``/model
+construction) via :func:`resolve_strategies`; no other module compares
+mode strings. Resolution is PER LEAF: an explicit ``ParamDef.strategy``
+tag wins, else the first matching ``SystemConfig.mode_overrides``
+``(path-glob, mode)`` rule (fnmatch against the ``label_tree`` dotted
+path), else ``mode``. A uniform assignment resolves to the plain
+singleton strategy; a mixed one resolves to a :class:`CompositeStrategy`
+facade that dispatches every per-parameter decision to the leaf's own
+strategy and answers whole-model queries (stream capabilities, byte
+accounting) by intersecting/summing over the resolved groups.
 
 The built-ins mirror the paper's comparison set plus one related-work
 extension:
 
-  zero3   full ('pod','data') sharding, regather fwd+bwd     (baseline)
+  zero3   full ('data','pod') sharding, regather fwd+bwd     (baseline)
   zeropp  full sharding, stage-1 result cached in HBM        (ZeRO++)
   fcdp    full sharding, stage-1 result cached in pinned
           host memory; frozen params stored pre-gathered     (the paper)
   mics    pod-replicated ('data',) sharding; no DCN gathers  (MiCS)
   hier    pod-replicated params, optimizer state sharded
-          over ('pod','data')             (hierarchical part., Xu et al.)
+          over ('data','pod')             (hierarchical part., Xu et al.)
 
 New modes register with :func:`register_strategy`.
 """
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple, Type, Union
+from typing import Any, Dict, Optional, Sequence, Tuple, Type, Union
 
 from jax.sharding import PartitionSpec as P
 
@@ -70,6 +78,11 @@ class GatherPlan:
     cache_after: int                 # 1 or 2: where the cache boundary sits
     frozen: bool = False
     compress_bwd: bool = False       # int8 DCN gradient reduce (beyond-paper)
+    # where the backward reads the cached stage from, carried PER PLAN so
+    # leaves of different strategy groups can coexist inside one
+    # checkpointed layer body (core/fcdp.py keys the remat policy on a
+    # placement-suffixed checkpoint_name): 'regather' | 'device' | 'host'
+    placement: str = "regather"
 
     @property
     def is_gathered(self) -> bool:
@@ -153,11 +166,17 @@ class ShardingStrategy:
         partitioning overrides this to shard optimizer state wider than
         the params themselves. engine/train.py reduce-scatters grads
         over (opt axes - storage axes) before the update and gathers
-        the updated shard back.
+        the updated shard back. Storage axes come FIRST in the tiling
+        order (hier's convention, now uniform): the widening
+        reduce-scatter subdivides each storage block over the widening
+        axes, so the storage-major opt spec assigns exactly that slice
+        to the device.
         """
         full = dataclasses.replace(pdef, fsdp_scope="full")
-        return self._spec_with_axes(
-            full, mesh, self.effective_fsdp_axes(full, mesh), min_shard_size)
+        storage = self.effective_fsdp_axes(pdef, mesh)
+        target = self.effective_fsdp_axes(full, mesh)
+        widened = storage + tuple(a for a in target if a not in storage)
+        return self._spec_with_axes(full, mesh, widened, min_shard_size)
 
     # -- gather schedule ----------------------------------------------------
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
@@ -170,11 +189,13 @@ class ShardingStrategy:
         """
         d = pdef.fsdp_dim
         if d is None or pdef.size() < min_shard_size:
-            return GatherPlan(None, (), (), 2, pdef.frozen)
+            return GatherPlan(None, (), (), 2, pdef.frozen,
+                              placement=self.cache_placement)
         axes = self.effective_fsdp_axes(pdef, mesh)
         degree = math.prod(mesh.shape[a] for a in axes) if axes else 1
         if not axes or pdef.shape[d] % degree != 0:
-            return GatherPlan(None, (), (), 2, pdef.frozen)
+            return GatherPlan(None, (), (), 2, pdef.frozen,
+                              placement=self.cache_placement)
         inter = tuple(a for a in axes if a == INTER_AXIS)
         intra = tuple(a for a in axes if a != INTER_AXIS)
         # cache boundary: after the inter stage if one exists, else after
@@ -184,7 +205,8 @@ class ShardingStrategy:
                              pdef.dims.index("stack") < d) else d
         return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
                           compress_bwd=(compress_bwd and bool(inter)
-                                        and not pdef.frozen))
+                                        and not pdef.frozen),
+                          placement=self.cache_placement)
 
     def plan_tree(self, defs, mesh, min_shard_size: int = 0,
                   compress_bwd: bool = False):
@@ -306,7 +328,7 @@ class MiCS(ShardingStrategy):
 class Hierarchical(MiCS):
     """Hierarchical partitioning (Xu et al.): params shard intra-pod
     only (MiCS gathers: no DCN AG in the step), but optimizer state and
-    master weights shard over the FULL ('pod','data') product -- the
+    master weights shard over the FULL ('data','pod') product -- the
     low-bandwidth trade that keeps MiCS's cheap gathers while paying
     only one pod-axis grad reduce-scatter plus one pod-axis updated-
     shard all-gather per step (amortized over all microbatches) instead
@@ -329,6 +351,118 @@ class Hierarchical(MiCS):
             # (opt state must never shard narrower than storage)
             return super().opt_spec(pdef, mesh, min_shard_size)
         return spec
+
+
+# ---------------------------------------------------------------------------
+# Composite (per-leaf mixed) strategies
+# ---------------------------------------------------------------------------
+
+class CompositeStrategy(ShardingStrategy):
+    """Per-leaf strategy dispatch behind the whole-model strategy surface.
+
+    Built by :func:`resolve_strategies` when a model mixes strategy
+    groups (MoE experts on mics while the dense trunk stays fcdp,
+    embeddings on hier, ...). Every per-parameter decision
+    (storage/opt specs, gather plans, byte accounting) dispatches to the
+    leaf's resolved strategy via its ``ParamDef.strategy`` tag; the
+    whole-model queries are derived from the resolved groups:
+
+      stream capabilities   intersection over the PARTICIPATING groups:
+                            ``max_prefetch_depth`` is the min over the
+                            groups that can stream at all (a group whose
+                            stage 1 is structurally empty -- mics/hier --
+                            neither benefits from nor vetoes the ring;
+                            its leaves ride the scan untouched), and the
+                            async grad-reduce stream is available when
+                            any group has a stage-1 reduce to move (only
+                            those groups' reduces are deferred).
+      tau split             the FCDP-Cache device-fraction split applies
+                            when any group supports it; the per-segment
+                            device promotion only touches host-placed
+                            caches (see core/fcdp.py), so foreign groups
+                            in a promoted segment are unaffected.
+      byte accounting       summed per leaf by the leaf's own strategy
+                            (core/cache.py reports the per-group split).
+    """
+
+    name = "composite"
+
+    def __init__(self, default: ShardingStrategy,
+                 groups: Dict[str, ShardingStrategy]):
+        self.default = default
+        self.groups = dict(groups)
+
+    def _for(self, pdef) -> ShardingStrategy:
+        tag = getattr(pdef, "strategy", None)
+        if not tag:
+            return self.default
+        return self.groups.get(tag) or get_strategy(tag)
+
+    def group_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.groups))
+
+    # -- per-leaf dispatch ---------------------------------------------------
+    def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
+        # no leaf in sight: answer for the default group (callers that
+        # care per leaf go through effective_fsdp_axes/storage_spec)
+        return self.default.storage_fsdp_axes(mesh, frozen)
+
+    def effective_fsdp_axes(self, pdef, mesh) -> Tuple[str, ...]:
+        return self._for(pdef).effective_fsdp_axes(pdef, mesh)
+
+    def storage_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+        return self._for(pdef).storage_spec(pdef, mesh, min_shard_size)
+
+    def opt_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
+        return self._for(pdef).opt_spec(pdef, mesh, min_shard_size)
+
+    def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
+                    compress_bwd: bool = False) -> GatherPlan:
+        return self._for(pdef).gather_plan(pdef, mesh, min_shard_size,
+                                           compress_bwd)
+
+    def cached_bytes_for(self, pdef, plan: GatherPlan, mi) -> float:
+        return self._for(pdef).cached_bytes_for(pdef, plan, mi)
+
+    # -- whole-model queries -------------------------------------------------
+    @property
+    def cache_placement(self) -> str:
+        # legacy whole-model view; the real placement travels per plan
+        return self.default.cache_placement
+
+    @property
+    def supports_device_cache(self) -> bool:
+        return any(s.supports_device_cache for s in self.groups.values())
+
+    @property
+    def max_prefetch_depth(self) -> int:
+        caps = [s.max_prefetch_depth for s in self.groups.values()
+                if s.max_prefetch_depth > 0]
+        return min(caps) if caps else 0
+
+    @property
+    def supports_async_grad_reduce(self) -> bool:
+        return any(s.supports_async_grad_reduce
+                   for s in self.groups.values())
+
+    # device_cache_groups: inherited -- the base guard reads the
+    # supports_device_cache property overridden above
+
+    def __repr__(self) -> str:
+        return (f"<CompositeStrategy default={self.default.name!r} "
+                f"groups={self.group_names()}>")
+
+
+def leaf_group(strategy, pdef) -> str:
+    """Accounting key of one leaf: its resolved strategy name (the
+    composite's default for untagged leaves, the strategy's own name
+    under a uniform assignment)."""
+    tag = getattr(pdef, "strategy", None)
+    if tag:
+        return tag
+    if isinstance(strategy, CompositeStrategy):
+        return strategy.default.name
+    return strategy.name
 
 
 # ---------------------------------------------------------------------------
@@ -369,4 +503,116 @@ def resolve_strategy(mode: Union[str, ShardingStrategy]) -> ShardingStrategy:
     """Accept a mode name or an already-resolved strategy object."""
     if isinstance(mode, ShardingStrategy):
         return mode
+    if mode is None:
+        raise ValueError(
+            "no strategy given; resolve one via resolve_strategies() "
+            "(per-leaf) or get_strategy(mode)")
     return get_strategy(mode)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf resolution (SystemConfig.mode_overrides / ParamDef.strategy)
+# ---------------------------------------------------------------------------
+
+def parse_mode_override(spec: str) -> Tuple[str, str]:
+    """Parse a CLI override spec ``'<path-glob>=<mode>'`` (e.g.
+    ``'blocks.*.moe.we_*=mics'``) into a ``(pattern, mode)`` rule."""
+    pattern, sep, mode = str(spec).partition("=")
+    pattern, mode = pattern.strip(), mode.strip()
+    if not sep or not pattern or not mode:
+        raise ValueError(
+            f"malformed mode override {spec!r}; expected "
+            "'<path-glob>=<mode>' (e.g. 'blocks.*.moe.we_*=mics')")
+    return pattern, mode
+
+
+def normalize_mode_overrides(
+        overrides: Sequence[Any]) -> Tuple[Tuple[str, str], ...]:
+    """Validate and canonicalize ``SystemConfig.mode_overrides``.
+
+    Accepts an ordered sequence of ``(pattern, mode)`` pairs or
+    ``'pattern=mode'`` strings; raises ``ValueError`` naming the
+    offending rule for a malformed rule or an unregistered strategy
+    name. Patterns are fnmatch globs matched against the ``label_tree``
+    dotted path of each ParamDef (``*`` crosses dots).
+    """
+    rules = []
+    for rule in tuple(overrides or ()):
+        if isinstance(rule, str):
+            pattern, mode = parse_mode_override(rule)
+        else:
+            try:
+                pattern, mode = rule
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"malformed mode_overrides rule {rule!r}; expected "
+                    "(pattern, mode) or 'pattern=mode'") from None
+            if not (isinstance(pattern, str) and isinstance(mode, str)
+                    and pattern.strip() and mode.strip()):
+                raise ValueError(
+                    f"malformed mode_overrides rule {rule!r}; pattern and "
+                    "mode must be non-empty strings")
+            pattern, mode = pattern.strip(), mode.strip()
+        if mode not in _REGISTRY:
+            raise ValueError(
+                f"mode_overrides rule {pattern!r}={mode!r} names an "
+                f"unknown strategy; registered: {sorted(_REGISTRY)}")
+        rules.append((pattern, mode))
+    return tuple(rules)
+
+
+def resolve_strategies(sys, defs):
+    """Resolve the per-leaf strategy assignment of a labeled ParamDef tree.
+
+    Resolution order per leaf: explicit ``ParamDef.strategy`` tag >
+    first matching ``SystemConfig.mode_overrides`` rule (fnmatch against
+    the dotted label) > ``SystemConfig.mode``. Returns
+    ``(defs, strategy)``: under a uniform default assignment the input
+    tree and the plain singleton strategy come back unchanged (the
+    zero-cost path every single-mode config takes); otherwise every leaf
+    is tagged with its resolved name and a :class:`CompositeStrategy`
+    over the present groups is returned.
+
+    Raises ``ValueError`` naming the offending rule when an override
+    rule is the first rule-match for zero parameter labels (catches
+    typo'd globs at construction time). Hit accounting is label-only:
+    explicit tags shadow a rule for assignment without invalidating it,
+    so re-resolving an already-tagged tree (the PEFT path re-labels
+    after injecting adapter leaves) stays stable.
+    """
+    import jax
+
+    from repro.core.partition import is_def
+    rules = normalize_mode_overrides(getattr(sys, "mode_overrides", ()))
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    if not rules and not any(getattr(d, "strategy", None) for d in leaves):
+        return defs, get_strategy(sys.mode)
+    default = get_strategy(sys.mode)
+    hits = [0] * len(rules)
+    tagged = []
+    for d in leaves:
+        rule_name = None
+        for ri, (pattern, mode) in enumerate(rules):
+            if fnmatch.fnmatchcase(d.label, pattern):
+                rule_name = mode
+                hits[ri] += 1
+                break
+        if getattr(d, "strategy", None):
+            name = d.strategy
+            get_strategy(name)                 # unknown tag raises here
+        else:
+            name = rule_name or default.name
+        tagged.append(dataclasses.replace(d, strategy=name))
+    for (pattern, mode), n in zip(rules, hits):
+        if n == 0:
+            raise ValueError(
+                f"mode_overrides rule {pattern!r}={mode!r} matched zero "
+                "parameters (patterns are fnmatch globs against dotted "
+                "label_tree paths, e.g. 'blocks.*.moe.we_*')")
+    groups = {d.strategy: get_strategy(d.strategy) for d in tagged}
+    defs = jax.tree.unflatten(treedef, tagged)
+    if len(groups) == 1 and default.name in groups:
+        # uniform after all (e.g. every leaf explicitly tagged with the
+        # default): keep the tags but serve the plain strategy
+        return defs, default
+    return defs, CompositeStrategy(default, groups)

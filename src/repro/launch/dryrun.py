@@ -24,7 +24,8 @@ from repro.configs.base import (RunConfig, SystemConfig, shape_cell,
                                 SHAPE_CELLS)
 from repro.configs.registry import (ARCH_IDS, cell_supported, get_config)
 from repro.core.engine import StepBundle
-from repro.core.strategy import DEFAULT_STRATEGY, strategy_names
+from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
+                                 strategy_names)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collect_collectives, flops_bytes_from_jaxpr,
                                    parse_stablehlo_counts, roofline_report)
@@ -39,7 +40,10 @@ def _mesh_sizes(mesh):
 def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                 mode: str = DEFAULT_STRATEGY, system_overrides=None,
                 verbose: bool = True, prefetch: bool = True,
-                prefetch_depth=None):
+                prefetch_depth=None, mode_overrides=()):
+    """mode_overrides: per-tensor strategy rules ((path-glob, mode), ...)
+    layered on top of ``mode`` -- the dry-run reports the per-group
+    byte breakdown whenever the resolution is mixed."""
     cfg = get_config(arch)
     cell = shape_cell(cell_name)
     ok, why = cell_supported(cfg, cell)
@@ -54,7 +58,8 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         prefetch_depth = 1 if prefetch else 0
     sysc = SystemConfig(mode=mode, loss_chunk=2048,
                         activation_policy="block_io",
-                        prefetch_depth=prefetch_depth)
+                        prefetch_depth=prefetch_depth,
+                        mode_overrides=tuple(mode_overrides or ()))
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
     run = RunConfig(model=cfg, shape=cell, system=sysc)
@@ -102,16 +107,19 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     rep = roofline_report(
         flops_exact, bytes_naive, stats, cfg, cell, n_chips,
         prefetch=depth_live,
-        inflight_bytes=acct["prefetch_buffer_bytes_per_chip"])
+        inflight_bytes=acct["prefetch_buffer_bytes_per_chip"],
+        group_bytes=acct["by_group"])
     result = {
         "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
         "mode": mode, "status": "ok",
+        "mode_overrides": list(map(list, sysc.mode_overrides)),
         "n_chips": n_chips,
         "prefetch_depth": depth_live,
         "prefetch_buffer_bytes_per_chip":
             acct["prefetch_buffer_bytes_per_chip"],
         "async_buffer_bytes_per_chip":
             acct["async_buffer_bytes_per_chip"],
+        "cache_by_group": acct["by_group"],
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": {
             "argument_bytes": ma.argument_size_in_bytes,
@@ -154,6 +162,13 @@ def main():
     ap.add_argument("--single-pod", action="store_true")
     ap.add_argument("--mode", default=DEFAULT_STRATEGY,
                     choices=list(strategy_names()))
+    ap.add_argument("--mode-override", action="append", default=[],
+                    metavar="GLOB=MODE",
+                    help="per-tensor strategy override rule matched "
+                         "against dotted param paths, first match wins; "
+                         "repeatable (e.g. --mode-override "
+                         "'blocks.*.moe.we_*=mics' --mode-override "
+                         "'embed=hier')")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the layer-ahead stage-1 gather prefetch")
     ap.add_argument("--prefetch-depth", type=int, default=None,
@@ -179,12 +194,14 @@ def main():
             pods.append(False)
         combos = [(a, c, mp) for a in archs for c in cells for mp in pods]
 
+    overrides = tuple(parse_mode_override(s) for s in args.mode_override)
     failures = 0
     for arch, cell, mp in combos:
         try:
             r = dryrun_cell(arch, cell, mp, args.mode,
                             prefetch=not args.no_prefetch,
-                            prefetch_depth=args.prefetch_depth)
+                            prefetch_depth=args.prefetch_depth,
+                            mode_overrides=overrides)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,
@@ -196,7 +213,8 @@ def main():
             print(f"[{arch} x {cell} x {'2pod' if mp else '1pod'}] "
                   f"SKIP: {r['reason']}")
 
-    out = args.out or (RESULTS_DIR / f"dryrun_{args.mode}.json")
+    out = args.out or (RESULTS_DIR / (
+        f"dryrun_{args.mode}{'_mixed' if overrides else ''}.json"))
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
     print(f"\nwrote {out}; {len(results)} cells, {failures} failures")

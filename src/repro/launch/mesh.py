@@ -41,9 +41,24 @@ def mesh_axes(mesh) -> Tuple[str, ...]:
     return tuple(mesh.axis_names)
 
 
+def fsdp_axes_of(axis_names: Sequence[str]) -> Tuple[str, ...]:
+    """ZeRO-3 sharding axes (all non-model axes), tiled INTRA-major
+    (pod last): the two-stage gather runs stage 1 (pod) first, then
+    stage 2 (data), so storage must be data-major for the staged
+    reconstruction to land blocks in true global order. With pod-major
+    tiling each stage-2 result would be a consistent block permutation
+    of the weight -- invisible while every leaf shares one strategy,
+    but wrong the moment per-tensor mixed sharding contracts a
+    two-stage-gathered leaf against a single-stage (mics/hier/frozen)
+    one. The single source of the ordering invariant: both
+    ``fsdp_axes(mesh)`` and ``MeshInfo.fsdp_axes`` delegate here."""
+    return (tuple(a for a in axis_names if a not in ("model", "pod"))
+            + tuple(a for a in axis_names if a == "pod"))
+
+
 def fsdp_axes(mesh) -> Tuple[str, ...]:
-    """Axes over which ZeRO-3 shards parameters (all non-model axes)."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    """Axes over which ZeRO-3 shards parameters (see fsdp_axes_of)."""
+    return fsdp_axes_of(mesh.axis_names)
 
 
 def inter_axis(mesh) -> Optional[str]:

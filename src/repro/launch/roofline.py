@@ -283,7 +283,9 @@ def model_flops(cfg, cell, n_chips: int) -> float:
 def roofline_report(flops_per_chip: float, bytes_per_chip: float,
                     stats: CollectiveStats, cfg, cell,
                     n_chips: int, prefetch: Any = False,
-                    inflight_bytes: float = 0.0) -> Dict[str, Any]:
+                    inflight_bytes: float = 0.0,
+                    group_bytes: Optional[Dict[str, Any]] = None
+                    ) -> Dict[str, Any]:
     """Derive the three roofline terms, plus -- when the streaming
     gather scheduler's prefetch is active -- the overlap credit: the
     stage-1 (pod-axis) parameter all-gathers are issued ahead of the
@@ -303,6 +305,12 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     credit; modes with no stage-1 (MiCS/hier, frozen layouts,
     single-pod meshes) have zero pod-axis AG bytes and are reported
     unchanged.
+
+    ``group_bytes`` (optional) is the per-strategy-group cache/buffer
+    byte split from ``core.cache.cache_bytes_per_chip``'s ``by_group``;
+    under per-tensor mixed sharding it shows which group pays which
+    tier (host cache vs ring slots vs regather), echoed verbatim as
+    ``groups``.
     """
     depth = int(prefetch)
     compute_t = flops_per_chip / PEAK_FLOPS
@@ -321,6 +329,7 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     mf = model_flops(cfg, cell, n_chips)
     hlo_total = flops_per_chip * n_chips
     return {
+        "groups": dict(group_bytes or {}),
         "prefetch": {
             "enabled": depth > 0,
             "depth": depth,

@@ -23,7 +23,8 @@ from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
                                 SystemConfig, shape_cell)
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core.engine import StepBundle
-from repro.core.strategy import DEFAULT_STRATEGY, strategy_names
+from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
+                                 strategy_names)
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.optim.adamw import init_opt_state
@@ -43,6 +44,9 @@ def build(args):
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         cell = shape_cell(args.cell)
     sysc = SystemConfig(mode=args.mode, peft=args.peft,
+                        mode_overrides=tuple(
+                            parse_mode_override(s)
+                            for s in args.mode_override),
                         activation_policy=args.activation_policy,
                         loss_chunk=args.loss_chunk,
                         min_shard_size=8 if args.smoke else 2048,
@@ -92,6 +96,11 @@ def main(argv=None):
     ap.add_argument("--cell", default="train_4k")
     ap.add_argument("--mode", default=DEFAULT_STRATEGY,
                     choices=list(strategy_names()))
+    ap.add_argument("--mode-override", action="append", default=[],
+                    metavar="GLOB=MODE",
+                    help="per-tensor strategy override (repeatable, "
+                         "first match wins), e.g. --mode-override "
+                         "'blocks.*.moe.we_*=mics'")
     ap.add_argument("--prefetch", action="store_true",
                     help="layer-ahead stage-1 gather prefetch (depth 1)")
     ap.add_argument("--prefetch-depth", type=int, default=None,

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import pvary, typeof
+from repro.launch.mesh import fsdp_axes_of
 
 
 @dataclass(frozen=True)
@@ -36,7 +37,7 @@ class MeshInfo:
 
     @property
     def fsdp_axes(self) -> Tuple[str, ...]:
-        return tuple(a for a in self.axis_names if a != "model")
+        return fsdp_axes_of(self.axis_names)
 
     @property
     def dp(self) -> int:

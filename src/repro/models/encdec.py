@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SystemConfig
 from repro.core.fcdp import gather_param
-from repro.core.partition import ParamDef
-from repro.core.strategy import get_strategy
+from repro.core.partition import ParamDef, label_tree
+from repro.core.strategy import resolve_strategies
 from repro.models import stack as stk
 from repro.models.common import MeshInfo, pad_vocab
 from repro.models.layers import chunked_tp_softmax_xent, embed_lookup, rms_norm
@@ -29,13 +29,14 @@ class EncDec:
     def __init__(self, cfg: ModelConfig, sys: SystemConfig, mesh):
         assert cfg.num_encoder_layers > 0
         self.cfg, self.sys, self.mesh = cfg, sys, mesh
-        self.strategy = get_strategy(sys.mode)
         self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum)
         self.n_enc = cfg.num_encoder_layers
         self.n_dec = cfg.num_layers
         self.plan_enc, self.plan_dec = ENC_PLAN, DEC_PLAN
         self.vpad = pad_vocab(cfg.vocab_size, self.mi.tp)
-        self._defs = self._build_defs()
+        # labels first, then per-leaf strategy resolution (see models/lm.py)
+        self._defs, self.strategy = resolve_strategies(
+            sys, label_tree(self._build_defs()))
         self._plans = self.strategy.plan_tree(
             self._defs, mesh, sys.min_shard_size,
             compress_bwd=(sys.grad_compress == "int8_pod"))

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SystemConfig
 from repro.core.fcdp import gather_param
-from repro.core.partition import ParamDef
-from repro.core.strategy import get_strategy
+from repro.core.partition import ParamDef, label_tree
+from repro.core.strategy import resolve_strategies
 from repro.models import stack as stk
 from repro.models.common import MeshInfo, pad_vocab, psum_tp
 from repro.models.layers import (chunked_tp_softmax_xent, embed_lookup,
@@ -46,11 +46,14 @@ class LM:
 
     def __init__(self, cfg: ModelConfig, sys: SystemConfig, mesh):
         self.cfg, self.sys, self.mesh = cfg, sys, mesh
-        self.strategy = get_strategy(sys.mode)
         self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum)
         self.plan, self.n_groups = layer_plan(cfg)
         self.vpad = pad_vocab(cfg.vocab_size, self.mi.tp)
-        self._defs = self._build_defs()
+        # labels first (override rules match dotted paths), then the
+        # per-leaf strategy resolution (ParamDef tag > mode_overrides >
+        # mode); uniform configs get the plain singleton strategy back
+        self._defs, self.strategy = resolve_strategies(
+            sys, label_tree(self._build_defs()))
         self._plans = self.strategy.plan_tree(
             self._defs, mesh, sys.min_shard_size,
             compress_bwd=(sys.grad_compress == "int8_pod"))

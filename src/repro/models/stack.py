@@ -179,11 +179,12 @@ def apply_stack(cfg: ModelConfig, sys: SystemConfig, mi: MeshInfo,
 
     stacked_params: pytree with leading stack dim on every leaf.
     stacked_plans: GatherPlan tree (body-level dims, see plan_tree(stacked=True)).
-    strategy: resolved ShardingStrategy (falls back to sys.mode).
+    strategy: resolved ShardingStrategy or CompositeStrategy (required:
+      the per-leaf resolution happens at model construction; this module
+      never resolves SystemConfig.mode itself).
     Returns (x, new_stacked_state, aux_sum).
     """
-    strategy = resolve_strategy(strategy if strategy is not None
-                                else sys.mode)
+    strategy = resolve_strategy(strategy)
 
     moe_sharded = (getattr(sys, "moe_serve_sharded", False)
                    and ctx.get("decode"))

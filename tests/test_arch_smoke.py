@@ -12,7 +12,7 @@ import pytest
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
                                 SystemConfig)
 from repro.configs.registry import ARCH_IDS, get_smoke_config
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.optim.adamw import init_opt_state
 
 CELL = ShapeCell("smoke", "train", 64, 8)

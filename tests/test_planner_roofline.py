@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
                                 ShapeCell, SystemConfig)
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 
 DENSE = ModelConfig(name="t-dense", family="dense", num_layers=4, d_model=64,
                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)

@@ -72,18 +72,24 @@ def test_register_custom_strategy():
 # ---------------------------------------------------------------------------
 
 # (mode, frozen) -> expected (spec entry, inter_axes, intra_axes,
-# cache_after) on the multi-pod ('pod','data','model') mesh
+# cache_after) on the multi-pod ('pod','data','model') mesh.
+# Full sharding tiles INTRA-major (('data','pod'), pod last): the
+# two-stage gather runs stage 1 (pod) then stage 2 (data), so data-major
+# storage is what makes the staged reconstruction land blocks in true
+# global order -- required for per-tensor mixed sharding, where a
+# two-stage-gathered leaf contracts against single-stage (mics/hier/
+# frozen) leaves and both must agree on the gathered basis.
 GOLDEN_MULTIPOD = {
-    ("zero3", False): (("pod", "data"), ("pod",), ("data",), 1),
-    ("zeropp", False): (("pod", "data"), ("pod",), ("data",), 1),
-    ("fcdp", False): (("pod", "data"), ("pod",), ("data",), 1),
+    ("zero3", False): (("data", "pod"), ("pod",), ("data",), 1),
+    ("zeropp", False): (("data", "pod"), ("pod",), ("data",), 1),
+    ("fcdp", False): (("data", "pod"), ("pod",), ("data",), 1),
     ("mics", False): ("data", (), ("data",), 2),
     # hier: params take the MiCS (pod-replicated) layout; only the
     # OPTIMIZER state widens to ('data','pod') -- see test_hier_opt_spec
     ("hier", False): ("data", (), ("data",), 2),
     # frozen: FCDP-Comm cached layout applies in fcdp only
-    ("zero3", True): (("pod", "data"), ("pod",), ("data",), 1),
-    ("zeropp", True): (("pod", "data"), ("pod",), ("data",), 1),
+    ("zero3", True): (("data", "pod"), ("pod",), ("data",), 1),
+    ("zeropp", True): (("data", "pod"), ("pod",), ("data",), 1),
     ("fcdp", True): ("data", (), ("data",), 2),
     ("mics", True): ("data", (), ("data",), 2),
     ("hier", True): ("data", (), ("data",), 2),
@@ -124,7 +130,7 @@ def test_golden_parity_singlepod(mesh2, mode):
 def test_golden_parity_tp_dim(mesh3):
     for mode in ("zero3", "fcdp"):
         spec = get_strategy(mode).storage_spec(WDEF_TP, mesh3)
-        assert spec == P(("pod", "data"), "model"), (mode, spec)
+        assert spec == P(("data", "pod"), "model"), (mode, spec)
 
 
 def test_cache_placement_per_mode():

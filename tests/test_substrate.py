@@ -11,7 +11,7 @@ import pytest
 from repro.configs.base import (MambaConfig, ModelConfig, MoEConfig,
                                 OptimizerConfig, RWKVConfig, RunConfig,
                                 ShapeCell, SystemConfig)
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.optim.adamw import init_opt_state
 
 try:

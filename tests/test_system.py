@@ -15,7 +15,7 @@ import pytest
 from repro.configs.base import (MambaConfig, ModelConfig, MoEConfig,
                                 OptimizerConfig, RWKVConfig, RunConfig,
                                 ShapeCell, SystemConfig)
-from repro.core.stepfn import StepBundle
+from repro.core.engine import StepBundle
 from repro.optim.adamw import init_opt_state
 
 DENSE = ModelConfig(name="t-dense", family="dense", num_layers=2, d_model=64,
