@@ -37,6 +37,32 @@ def bench_numbers():
     return json.load(open(RESULTS / "bench_results.json"))
 
 
+def smoke_appendix():
+    """Summarize EVERY results/bench_smoke*.json the CI smoke path wrote
+    (discovered by glob, not a hard-coded list, so new smoke axes --
+    prefetch-depth, mixed-mode, cross-step, ... -- appear here the day
+    they land)."""
+    files = sorted(RESULTS.glob("bench_smoke*.json"))
+    if not files:
+        return "_(no bench_smoke*.json present -- run " \
+               "`python benchmarks/run.py --smoke`)_"
+    out = ["| file | benches / axes | rows |", "|---|---|---|"]
+    for f in files:
+        try:
+            data = json.load(open(f))
+        except Exception as e:  # keep the table rendering over one bad file
+            out.append(f"| {f.name} | unreadable: {e} | — |")
+            continue
+        if "rows" in data:      # a single-bench smoke file
+            keys, n = "smoke", len(data["rows"])
+        else:                   # the aggregate bench_smoke.json
+            keys = ", ".join(sorted(data))
+            n = sum(len(v.get("rows", []))
+                    for v in data.values() if isinstance(v, dict))
+        out.append(f"| {f.name} | {keys} | {n} |")
+    return "\n".join(out)
+
+
 def dryrun_summary():
     cells = json.load(open(RESULTS / "dryrun_fcdp.json"))
     ok = [c for c in cells if c["status"] == "ok"]
@@ -79,6 +105,7 @@ def main():
         perf_table=perf_table(),
         table_1pod=render(False),
         table_2pod=render(True),
+        smoke_appendix=smoke_appendix(),
     )
     (ROOT / "EXPERIMENTS.md").write_text(text)
     print(f"wrote EXPERIMENTS.md ({len(text)} chars)")
@@ -354,6 +381,10 @@ paper does not address (TP activation volume, MoE weight movement).
   shards), grad reduce is log/ring over pods; checkpoint shards per
   process; data pipeline is seeded per (shard, step) with no central
   coordinator.
+
+## §CI smoke artifacts
+
+{smoke_appendix}
 """
 
 if __name__ == "__main__":

@@ -58,13 +58,15 @@ def bench_comm_smoke(rows):
     cell = ShapeCell("t", "train", 64, 8)
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     out = []
+    roofline_cells = []
     for mode in strategy_names():
         for depth in (0, 1, 2):
             sysc = SystemConfig(mode=mode, min_shard_size=8,
                                 prefetch_depth=depth)
             b = StepBundle(RunConfig(model=cfg, shape=cell, system=sysc),
                            mesh)
-            closed = b.make_train_step().trace(*b.train_input_sds()).jaxpr
+            step = b.make_train_step()
+            closed = step.trace(*b.train_input_sds()).jaxpr
             sizes = {a: b.mi.size(a) for a in b.mi.axis_names}
             stats = collect_collectives(closed, sizes)
             flops, nbytes = flops_bytes_from_jaxpr(closed, 8)
@@ -73,6 +75,21 @@ def bench_comm_smoke(rows):
             rep = roofline_report(
                 flops, nbytes, stats, cfg, cell, 8, prefetch=live,
                 inflight_bytes=acct["prefetch_buffer_bytes_per_chip"])
+            if depth == 1:
+                # one dryrun-shaped cell per mode so CI can smoke the
+                # roofline_table --json renderer against real output
+                ma = step.lower(*b.train_input_sds()).compile() \
+                    .memory_analysis()
+                roofline_cells.append({
+                    "arch": cfg.name, "cell": cell.name,
+                    "multi_pod": True, "mode": mode, "status": "ok",
+                    "mode_overrides": [], "n_chips": 8,
+                    "memory": {"peak_est_bytes":
+                               ma.argument_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               + ma.output_size_in_bytes
+                               - ma.alias_size_in_bytes},
+                    "roofline": rep})
             # schema the full benches / EXPERIMENTS tables consume
             for key in ("compute_s", "memory_s", "collective_s", "ici_s",
                         "dcn_s", "dominant", "prefetch", "coll_by_op",
@@ -119,6 +136,8 @@ def bench_comm_smoke(rows):
     for mode in ("mics", "hier"):
         assert by[(mode, 1)]["overlapped_dcn_bytes"] == 0
         assert by[(mode, 1)]["depth_live"] == 0
+    with open(RESULTS / "roofline_smoke.json", "w") as f:
+        json.dump(roofline_cells, f, indent=2, default=float)
     return {"smoke": True, "rows": out}
 
 
@@ -225,6 +244,98 @@ def bench_mixed_smoke(rows):
     assert np.isfinite(float(m["loss"]))
     result = {"smoke": True, "loss": float(m["loss"]), "rows": out}
     with open(RESULTS / "bench_smoke_mixed.json", "w") as f:
+        json.dump(result, f, indent=2, default=float)
+    return result
+
+
+def bench_xstep_smoke(rows):
+    """--smoke cross-step axis: the same toy dense cell traced with the
+    cross-step optimizer pipeline (stream 3) off/on, plus a 2-step
+    training run on each schedule. Pins the acceptance invariants: the
+    per-step DCN volume of the steady-state piped step is byte-identical
+    to the fused step (the epilogue collectives move, they are not
+    added), the step-boundary carry is accounted nonzero only when the
+    stream is live, and losses are bit-identical across the two
+    schedules. Writes results/bench_smoke_xstep.json (uploaded by CI
+    next to the other bench_smoke*.json artifacts)."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                    ShapeCell, SystemConfig)
+    from repro.core.cache import cache_bytes_per_chip
+    from repro.core.engine import StepBundle
+    from repro.launch.mesh import make_mesh
+    from repro.launch.roofline import collect_collectives
+    from repro.optim.adamw import init_opt_state
+    cfg = ModelConfig(name="smoke-dense", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256)
+    cell = ShapeCell("t", "train", 64, 8)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rng = np.random.default_rng(0)
+    batches = [{"ids": jnp.asarray(rng.integers(1, 256, (8, 64)), jnp.int32),
+                "labels": jnp.asarray(rng.integers(1, 256, (8, 64)),
+                                      jnp.int32),
+                "mask": jnp.ones((8, 64), bool)} for _ in range(2)]
+    out = []
+    for xstep in (False, True):
+        sysc = SystemConfig(mode="fcdp", min_shard_size=8,
+                            async_grad_reduce=True,
+                            cross_step_pipeline=xstep)
+        run = RunConfig(model=cfg, shape=cell, system=sysc,
+                        optimizer=OptimizerConfig(total_steps=4,
+                                                  warmup_steps=1),
+                        microbatch=2)
+        b = StepBundle(run, mesh)
+        acct = cache_bytes_per_chip(b)
+        closed = b.make_train_step().trace(*b.train_input_sds()).jaxpr
+        sizes = {a: b.mi.size(a) for a in b.mi.axis_names}
+        stats = collect_collectives(closed, sizes)
+        params = b.init_all_params(seed=0)
+        tp, fp = b.split(params)
+        opt = jax.jit(functools.partial(init_opt_state, sys=sysc))(tp)
+        if xstep:
+            carry, m0 = b.make_train_prime()(tp, fp, opt, batches[0])
+            tp, opt, carry, m1 = b.make_train_step()(tp, fp, opt, carry,
+                                                     batches[1])
+            tp, opt, _ = b.make_train_flush()(tp, opt, carry)
+        else:
+            step = b.make_train_step()
+            tp, opt, m0 = step(tp, fp, opt, batches[0])
+            tp, opt, m1 = step(tp, fp, opt, batches[1])
+        out.append({"cross_step": xstep,
+                    "cross_step_live": acct["cross_step"],
+                    "cross_step_buffer_bytes":
+                        acct["cross_step_buffer_bytes_per_chip"],
+                    "dcn_bytes": stats.dcn_bytes,
+                    "pod_ag_bytes": stats.by_op_axis.get(
+                        "all_gather/pod", 0.0),
+                    "pod_rs_bytes": stats.by_op_axis.get(
+                        "psum_scatter/pod", 0.0),
+                    "losses": [float(m0["loss"]), float(m1["loss"])],
+                    "params_sum": float(sum(
+                        jnp.sum(jnp.asarray(x, jnp.float32))
+                        for x in tp))})
+        rows.append((f"xstep_smoke/{'on' if xstep else 'off'}_dcn_MB", 0,
+                     stats.dcn_bytes / 1e6))
+        rows.append((f"xstep_smoke/{'on' if xstep else 'off'}_carry_MB", 0,
+                     acct["cross_step_buffer_bytes_per_chip"] / 1e6))
+    off, on = out
+    # the collective moves, it is not added: steady-state DCN volume is
+    # byte-identical per op, and the carry is the only new memory
+    assert abs(on["dcn_bytes"] - off["dcn_bytes"]) \
+        < 1e-6 * max(off["dcn_bytes"], 1.0)
+    assert abs(on["pod_rs_bytes"] - off["pod_rs_bytes"]) \
+        < 1e-6 * max(off["pod_rs_bytes"], 1.0)
+    assert on["cross_step_live"] and on["cross_step_buffer_bytes"] > 0
+    assert not off["cross_step_live"] and \
+        off["cross_step_buffer_bytes"] == 0
+    # staleness-free pipelining: bit-identical losses and updated params
+    assert on["losses"] == off["losses"]
+    assert on["params_sum"] == off["params_sum"]
+    result = {"smoke": True, "rows": out}
+    with open(RESULTS / "bench_smoke_xstep.json", "w") as f:
         json.dump(result, f, indent=2, default=float)
     return result
 
@@ -489,7 +600,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI path: kernel oracles + toy-mesh comm "
-                         "schema check + mixed-mode dry-run")
+                         "schema check + mixed-mode dry-run + cross-step "
+                         "on/off axis")
     ap.add_argument("--mode-override", action="append", default=[],
                     metavar="GLOB=MODE",
                     help="per-tensor strategy override applied on top of "
@@ -503,6 +615,7 @@ def main() -> None:
                                 for s in args.mode_override)
     benches = ([("comm_smoke", bench_comm_smoke),
                 ("mixed_smoke", bench_mixed_smoke),
+                ("xstep_smoke", bench_xstep_smoke),
                 ("kernels", bench_kernels)]
                if args.smoke else BENCHES)
     RESULTS.mkdir(exist_ok=True)

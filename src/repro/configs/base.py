@@ -171,6 +171,24 @@ class SystemConfig:
     # DCN overlap; total reduce volume is unchanged. Strategy-gated
     # (needs a non-empty stage 1; MiCS/hier decline).
     async_grad_reduce: bool = False
+    # third scheduler stream (engine/train.py): pipeline the once-per-step
+    # optimizer epilogue -- the LAST microbatch's pod-axis reduce-scatter,
+    # the optimizer apply, and the widened updated-shard all-gather --
+    # across the step boundary: step i returns a carry of (accumulated
+    # storage-level grads, the last microbatch's stage-1-level pending
+    # grads) and step i+1 finalizes it at its top, where the epilogue
+    # collectives have no data dependency on step i+1's first microbatch
+    # forward prologue and overlap with it. Staleness-free: step i+1's
+    # forward consumes the UPDATED parameters (the swap happens before the
+    # first layer that reads them); only the collectives' latency is
+    # hidden, per-step DCN volume is byte-identical. Requires
+    # async_grad_reduce (the deferred pod reduce is the stream-2
+    # primitive, validated here) and gradient accumulation
+    # (RunConfig.microbatch >= 2, validated at RunConfig construction);
+    # strategy-gated via supports_cross_step (MiCS/hier decline on their
+    # own -- no stage-1 reduce to carry -- but their widened epilogue
+    # collectives ride the carry when mixed with a streaming group).
+    cross_step_pipeline: bool = False
     host_offload: bool = True          # False -> Saveable instead of Offloadable
     # FCDP-Comm / PEFT
     peft: bool = False
@@ -243,6 +261,12 @@ class SystemConfig:
             raise ValueError(
                 f"prefetch_depth must be a non-negative int, got {depth!r}")
         object.__setattr__(self, "prefetch_depth", depth)
+        if self.cross_step_pipeline and not self.async_grad_reduce:
+            raise ValueError(
+                "cross_step_pipeline=True requires async_grad_reduce=True: "
+                "the carried epilogue is the stream-2 deferred pod reduce "
+                "plus the optimizer apply; without the async stream there "
+                "is no stage-1-level pending gradient to carry")
 
     def replace(self, **kw) -> "SystemConfig":
         # dataclasses.replace re-derives unspecified InitVars via
@@ -280,6 +304,13 @@ class RunConfig:
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
     seed: int = 0
     microbatch: int = 0          # 0 -> no gradient accumulation
+
+    def __post_init__(self):
+        if self.system.cross_step_pipeline and self.microbatch < 2:
+            raise ValueError(
+                "cross_step_pipeline=True requires gradient accumulation "
+                f"(microbatch >= 2), got microbatch={self.microbatch!r}: "
+                "the carried epilogue is defined per accumulation step")
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

@@ -26,6 +26,8 @@ import jax
 from repro.core.schedule import (GatherScheduler,
                                  async_buffer_bytes_by_group,
                                  async_reduce_enabled,
+                                 cross_step_buffer_bytes_by_group,
+                                 cross_step_enabled,
                                  prefetch_buffer_bytes_by_group)
 from repro.core.strategy import GatherPlan, get_strategy, leaf_group
 
@@ -50,11 +52,13 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
     nothing, device groups pay HBM and show up in the compiled peak).
 
     Also reports the streaming gather scheduler's in-flight stage-1 ring
-    buffers (k x one layer group's stage-1 bytes) and, when the async
-    grad-reduce stream is live for this run, its resident stage-1
-    buffers (the leaf-level gathered param view + the carried gradient
-    buffer) -- all HBM-resident, so the planner counts them against the
-    tau budget.
+    buffers (k x one layer group's stage-1 bytes), the async grad-reduce
+    stream's resident stage-1 buffers (the leaf-level gathered param
+    view + the carried gradient buffer) when that stream is live, and
+    the cross-step pipeline's step-boundary carry (accumulated
+    storage-level grads + the last microbatch's pending stage-1 grads)
+    when stream 3 is live -- all HBM-resident, so the planner counts
+    them against the tau budget.
     """
     mi = bundle.mi
     strategy = bundle.strategy
@@ -70,7 +74,8 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
                 "placement": get_strategy(g).cache_placement,
                 "n_leaves": 0,
                 "prefetch_buffer_bytes_per_chip": 0.0,
-                "async_buffer_bytes_per_chip": 0.0})
+                "async_buffer_bytes_per_chip": 0.0,
+                "cross_step_buffer_bytes_per_chip": 0.0})
         gb["cached_bytes_per_chip"] += strategy.cached_bytes_for(d, p, mi)
         gb["n_leaves"] += 1
     # the depth the scheduler actually resolves for this bundle (0 when
@@ -84,6 +89,11 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
         for g, b in async_buffer_bytes_by_group(
                 strategy, defs, plans, mi).items():
             by_group[g]["async_buffer_bytes_per_chip"] = b
+    xstep = cross_step_enabled(bundle.run, strategy, mi)
+    if xstep:
+        for g, b in cross_step_buffer_bytes_by_group(
+                strategy, defs, plans, mi).items():
+            by_group[g]["cross_step_buffer_bytes_per_chip"] = b
     host = sum(gb["cached_bytes_per_chip"] for gb in by_group.values()
                if gb["placement"] == "host")
     return {"host_cache_bytes_per_chip": host,
@@ -95,6 +105,10 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
                 for gb in by_group.values()),
             "async_buffer_bytes_per_chip": sum(
                 gb["async_buffer_bytes_per_chip"]
+                for gb in by_group.values()),
+            "cross_step": xstep,
+            "cross_step_buffer_bytes_per_chip": sum(
+                gb["cross_step_buffer_bytes_per_chip"]
                 for gb in by_group.values()),
             "by_group": by_group}
 
@@ -114,6 +128,10 @@ class CachePlan:
     # prefetch depth the winning configuration ran with -- may be lower
     # than the run's own depth when ring buffers were demoted to fit
     prefetch_depth: int = 0
+    # whether the winning configuration keeps the cross-step optimizer
+    # pipeline (stream 3); demoted FIRST -- dropping it frees the
+    # step-boundary carry buffers and costs only epilogue overlap
+    cross_step: bool = False
 
 
 class MemoryPlanner:
@@ -142,6 +160,9 @@ class MemoryPlanner:
               "prefetch_buffer_bytes": acct[
                   "prefetch_buffer_bytes_per_chip"],
               "async_buffer_bytes": acct["async_buffer_bytes_per_chip"],
+              "cross_step": acct["cross_step"],
+              "cross_step_buffer_bytes": acct[
+                  "cross_step_buffer_bytes_per_chip"],
               "peak_bytes": peak, "host_bytes": acct[
                   "host_cache_bytes_per_chip"],
               "by_group": acct["by_group"]}
@@ -153,11 +174,13 @@ class MemoryPlanner:
                 and (self.host is None or it["host_bytes"] <= self.host))
 
     def plan(self, run, mesh, fractions=(1.0, 0.5, 0.25, 0.0)) -> CachePlan:
-        """Demote until the step fits: prefetch depth first (k -> 0 at
-        the fastest device fraction -- each step frees one in-flight
-        stage-1 ring buffer and costs only overlap), then device-cache
-        fractions high -> low, then the activation-remat (block_io)
-        fallback, then declare regather-only.
+        """Demote until the step fits, in fixed order: the cross-step
+        optimizer pipeline first (dropping it frees the step-boundary
+        carry buffers and costs only epilogue overlap), then prefetch
+        depth (k -> 0 at the fastest device fraction -- each step frees
+        one in-flight stage-1 ring buffer and costs only overlap), then
+        device-cache fractions high -> low, then the activation-remat
+        (block_io) fallback, then declare regather-only.
 
         Each demotion acts on the groups it can act on (per-tensor mixed
         sharding): a depth step shrinks only the streaming groups' ring
@@ -170,23 +193,28 @@ class MemoryPlanner:
         from repro.core.engine import StepBundle
         probe = StepBundle(run, mesh)
         k0 = probe.strategy.prefetch_depth(run.system, probe.mi)
-        attempts = ([(fractions[0], d) for d in range(k0, 0, -1)]
-                    + [(f, 0) for f in fractions])
+        x0 = cross_step_enabled(run, probe.strategy, probe.mi)
+        attempts = ([(fractions[0], k0, True)] if x0 else []) \
+            + [(fractions[0], d, False) for d in range(k0, 0, -1)] \
+            + [(f, 0, False) for f in fractions]
         iters: List[Dict] = []
-        for frac, depth in attempts:
+        for frac, depth, xs in attempts:
             sysc = run.system.replace(device_cache_fraction=frac,
-                                      prefetch_depth=depth)
+                                      prefetch_depth=depth,
+                                      cross_step_pipeline=xs)
             it = self._attempt(run, mesh, sysc, iters)
             if self._fits(it):
                 return CachePlan(frac, True, it["peak_bytes"],
                                  it["host_bytes"], iters,
                                  activation_policy=sysc.activation_policy,
-                                 prefetch_depth=it["prefetch_depth"])
+                                 prefetch_depth=it["prefetch_depth"],
+                                 cross_step=it["cross_step"])
         # device cache fully demoted and still over budget: trade compute
         # for memory with full activation remat before giving up
         if run.system.activation_policy != "block_io":
             sysc = run.system.replace(device_cache_fraction=0.0,
                                       prefetch_depth=0,
+                                      cross_step_pipeline=False,
                                       activation_policy="block_io")
             it = self._attempt(run, mesh, sysc, iters)
             if self._fits(it):

@@ -147,9 +147,27 @@ class StepBundle:
         return out
 
     # -- step builders (bodies in engine/train.py, engine/serve.py) ---------
+    @property
+    def cross_step(self) -> bool:
+        """Whether the cross-step pipelined optimizer stream (stream 3)
+        is live for this run -- the steady-state train step then takes
+        and returns a step-level carry (see engine/train.py)."""
+        from repro.core import schedule as sched
+        return sched.cross_step_enabled(self.run, self.strategy, self.mi)
+
     def make_train_step(self):
         from repro.core.engine.train import build_train_step
         return build_train_step(self)
+
+    def make_train_prime(self):
+        """Pipeline-fill step for the cross-step schedule (no update)."""
+        from repro.core.engine.train import build_train_prime
+        return build_train_prime(self)
+
+    def make_train_flush(self):
+        """Pipeline-drain step: finalize the outstanding carry."""
+        from repro.core.engine.train import build_train_flush
+        return build_train_flush(self)
 
     def make_prefill_step(self):
         from repro.core.engine.serve import build_prefill_step
@@ -177,7 +195,23 @@ class StepBundle:
                    "step": jax.ShapeDtypeStruct(
                        (), jnp.int32,
                        sharding=NamedSharding(self.mesh, P()))}
-        return train_sds, frozen_sds, opt_sds, self.batch_sds(self.run.shape)
+        batch_sds = self.batch_sds(self.run.shape)
+        if self.cross_step:
+            # the steady-state (piped) step signature carries the
+            # cross-step epilogue buffers in position 3
+            return (train_sds, frozen_sds, opt_sds,
+                    self.cross_step_carry_sds(), batch_sds)
+        return train_sds, frozen_sds, opt_sds, batch_sds
+
+    def cross_step_carry_sds(self):
+        """ShapeDtypeStructs of the cross-step carry (stream 3)."""
+        from repro.core.engine.train import cross_step_carry_layout
+        layout = cross_step_carry_layout(self)
+        return {k: [jax.ShapeDtypeStruct(
+                        shape, dtype,
+                        sharding=NamedSharding(self.mesh, spec))
+                    for spec, shape, dtype in v]
+                for k, v in layout.items()}
 
     # -- serve state (derivations in engine/serve.py) ------------------------
     def _serve_batch_dims(self, cell: ShapeCell,

@@ -45,13 +45,33 @@ deferred pod-axis psum_scatter one microbatch later, where it has no
 data dependency on the in-flight forward. One stage-1-sized gradient
 buffer is in flight at all times; total reduce volume is unchanged.
 
+Stream 3 -- cross-step pipelined optimizer epilogue (leaf-level helpers)
+------------------------------------------------------------------------
+Streams 1 and 2 hide the *in-step* collectives; the once-per-step
+optimizer tail -- the LAST microbatch's pod-axis reduce-scatter, the
+optimizer apply, and the widened updated-shard all-gather -- still
+serializes between steps. With ``SystemConfig.cross_step_pipeline`` the
+train engine carries that epilogue across the step boundary: step i
+returns (accumulated storage-level grads, the last microbatch's
+stage-1-level pending grads) as a step-level carry, and step i+1
+finalizes it at its top, where the epilogue collectives have no data
+dependency on step i+1's first microbatch forward prologue and overlap
+with it under XLA's latency-hiding scheduler. Staleness-free by
+construction: the finalized (updated) parameters are what step i+1's
+forward consumes -- the swap happens before the first layer that reads
+them, so only the collectives' latency moves, never the values.
+:func:`cross_step_enabled` is the single source of truth for whether
+the stream is live; :func:`cross_step_buffer_bytes` is the analytic
+per-chip size of the carried buffers.
+
 Memory accounting
 -----------------
 :func:`prefetch_buffer_bytes` is the analytic per-chip size of the k
 in-flight ring slots. FCDP-Cache's planner (core/cache.py) counts it
-against the tau/HBM budget and demotes prefetch depth before demoting
-the device cache; launch/dryrun.py and launch/roofline.py surface it
-per cell.
+against the tau/HBM budget and demotes in fixed order -- the cross-step
+carry first (it costs only step-boundary overlap), then prefetch depth,
+then the device cache; launch/dryrun.py and launch/roofline.py surface
+all three per cell.
 """
 from __future__ import annotations
 
@@ -297,6 +317,60 @@ def async_buffer_bytes(strategy, def_leaves, plan_leaves, mi) -> float:
     streaming strategy groups contribute (single-stage groups under
     mixed sharding defer nothing)."""
     return sum(async_buffer_bytes_by_group(
+        strategy, def_leaves, plan_leaves, mi).values())
+
+
+def cross_step_enabled(run, strategy, mi) -> bool:
+    """Whether engine/train.py actually pipelines the optimizer epilogue
+    across the step boundary for this run: the stream rides the async
+    grad-reduce stream (the carried pending gradient IS stream 2's
+    deferred pod reduce), so all of stream 2's conditions apply, plus
+    the cross_step_pipeline flag and the strategy's willingness."""
+    return (async_reduce_enabled(run, strategy, mi)
+            and strategy.cross_step_active(run.system, mi))
+
+
+def _leaf_shard_bytes(d, p: GatherPlan, mi) -> float:
+    """Per-chip bytes of one leaf's STORAGE shard, derived from its own
+    gather plan (not the whole-mesh fsdp axes: a pod-replicated mics/hier
+    leaf shards over the intra axes only)."""
+    import jax
+    nbytes = d.size() * jax.dtypes.canonicalize_dtype(d.dtype).itemsize
+    deg = mi.tp if d.tp_dim is not None else 1
+    if p.is_gathered:
+        import math
+        deg *= math.prod(mi.size(a) for a in p.inter_axes + p.intra_axes)
+    return nbytes / max(deg, 1)
+
+
+def cross_step_buffer_bytes_by_group(strategy, def_leaves, plan_leaves,
+                                     mi) -> dict:
+    """Per-strategy-group split of :func:`cross_step_buffer_bytes`."""
+    import math
+    out: dict = {}
+    for d, p in zip(def_leaves, plan_leaves):
+        if not _is_plan(p) or d.frozen:
+            continue
+        shard = _leaf_shard_bytes(d, p, mi)
+        inter_deg = 1
+        if p.is_gathered and p.inter_axes:
+            inter_deg = math.prod(mi.size(a) for a in p.inter_axes) or 1
+        # storage-level accumulated grads + stage-1-level pending grads
+        # (pending collapses to the storage shard for single-stage leaves)
+        g = leaf_group(strategy, d)
+        out[g] = out.get(g, 0.0) + shard * (1.0 + inter_deg)
+    return out
+
+
+def cross_step_buffer_bytes(strategy, def_leaves, plan_leaves, mi) -> float:
+    """Per-chip HBM bytes the cross-step carry keeps resident across the
+    step boundary: for every trainable leaf, one storage-shard-sized
+    accumulated-gradient buffer plus one stage-1-shard-sized pending
+    gradient buffer (the last microbatch's deferred pod reduce operand).
+    Frozen leaves carry nothing. The pre-update parameter view the next
+    step finalizes against is the step input itself, already counted in
+    the argument bytes."""
+    return sum(cross_step_buffer_bytes_by_group(
         strategy, def_leaves, plan_leaves, mi).values())
 
 

@@ -116,6 +116,16 @@ class ShardingStrategy:
     # stream applies (it needs a per-microbatch stage-1 reduce to move).
     max_prefetch_depth: int = 8
     supports_async_grad_reduce: bool = True
+    # whether the cross-step pipelined optimizer stream (stream 3,
+    # engine/train.py) applies: the strategy must have a per-microbatch
+    # stage-1 reduce whose last instance (plus the optimizer apply and
+    # the widened updated-shard gather) can be carried across the step
+    # boundary. Structurally stage-1-free modes decline on their own,
+    # but their widened epilogue collectives DO ride the carry when they
+    # coexist with a streaming group under per-tensor mixed sharding
+    # (CompositeStrategy intersects per group: any streaming group
+    # enables the carry, and the whole epilogue is deferred).
+    supports_cross_step: bool = True
 
     @property
     def supports_prefetch(self) -> bool:
@@ -251,6 +261,16 @@ class ShardingStrategy:
                 and self.supports_async_grad_reduce
                 and INTER_AXIS in tuple(mesh_like.axis_names))
 
+    def cross_step_active(self, sys, mesh_like) -> bool:
+        """Whether the cross-step pipelined optimizer stream (stream 3)
+        applies: it rides the async grad-reduce stream (the carried
+        pending gradient IS the stream-2 deferred reduce), so the
+        strategy must support both, the flag must be on, and the mesh
+        must have a slow tier whose epilogue latency is worth hiding."""
+        return (bool(getattr(sys, "cross_step_pipeline", False))
+                and self.supports_cross_step
+                and self.async_grad_reduce_active(sys, mesh_like))
+
     # -- analytic byte accounting --------------------------------------------
     def cached_bytes_for(self, pdef, plan: GatherPlan, mi) -> float:
         """Per-chip size of this param's cached tier (0 when regathered).
@@ -320,6 +340,7 @@ class MiCS(ShardingStrategy):
     cache_placement = "regather"
     max_prefetch_depth = 0            # stage 1 structurally empty
     supports_async_grad_reduce = False
+    supports_cross_step = False       # no stage-1 reduce to carry
 
     def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
         return intra_fsdp_axes(mesh)
@@ -444,6 +465,13 @@ class CompositeStrategy(ShardingStrategy):
     def supports_async_grad_reduce(self) -> bool:
         return any(s.supports_async_grad_reduce
                    for s in self.groups.values())
+
+    @property
+    def supports_cross_step(self) -> bool:
+        # any streaming group enables the cross-step carry; the deferred
+        # epilogue then covers EVERY group's once-per-step collectives
+        # (incl. a hier group's widened reduce-scatter/all-gather pair)
+        return any(s.supports_cross_step for s in self.groups.values())
 
     # device_cache_groups: inherited -- the base guard reads the
     # supports_device_cache property overridden above

@@ -40,10 +40,17 @@ def _mesh_sizes(mesh):
 def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                 mode: str = DEFAULT_STRATEGY, system_overrides=None,
                 verbose: bool = True, prefetch: bool = True,
-                prefetch_depth=None, mode_overrides=()):
+                prefetch_depth=None, mode_overrides=(),
+                microbatch: int = 0, async_grad_reduce: bool = False,
+                cross_step: bool = False):
     """mode_overrides: per-tensor strategy rules ((path-glob, mode), ...)
     layered on top of ``mode`` -- the dry-run reports the per-group
-    byte breakdown whenever the resolution is mixed."""
+    byte breakdown whenever the resolution is mixed.
+
+    cross_step lowers the STEADY-STATE (piped) step of the cross-step
+    optimizer pipeline (requires async_grad_reduce and microbatch >= 2);
+    its per-step DCN volume is byte-identical to the fused step, and the
+    JSON additionally carries ``cross_step_buffer_bytes_per_chip``."""
     cfg = get_config(arch)
     cell = shape_cell(cell_name)
     ok, why = cell_supported(cfg, cell)
@@ -59,10 +66,13 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     sysc = SystemConfig(mode=mode, loss_chunk=2048,
                         activation_policy="block_io",
                         prefetch_depth=prefetch_depth,
+                        async_grad_reduce=async_grad_reduce,
+                        cross_step_pipeline=cross_step,
                         mode_overrides=tuple(mode_overrides or ()))
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
-    run = RunConfig(model=cfg, shape=cell, system=sysc)
+    run = RunConfig(model=cfg, shape=cell, system=sysc,
+                    microbatch=microbatch)
     t0 = time.time()
     bundle = StepBundle(run, mesh)
     # the depth the streaming gather scheduler actually runs at on this
@@ -108,7 +118,9 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         flops_exact, bytes_naive, stats, cfg, cell, n_chips,
         prefetch=depth_live,
         inflight_bytes=acct["prefetch_buffer_bytes_per_chip"],
-        group_bytes=acct["by_group"])
+        group_bytes=acct["by_group"],
+        cross_step=acct["cross_step"],
+        cross_step_bytes=acct["cross_step_buffer_bytes_per_chip"])
     result = {
         "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
         "mode": mode, "status": "ok",
@@ -119,6 +131,9 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
             acct["prefetch_buffer_bytes_per_chip"],
         "async_buffer_bytes_per_chip":
             acct["async_buffer_bytes_per_chip"],
+        "cross_step": acct["cross_step"],
+        "cross_step_buffer_bytes_per_chip":
+            acct["cross_step_buffer_bytes_per_chip"],
         "cache_by_group": acct["by_group"],
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": {
@@ -174,10 +189,27 @@ def main():
     ap.add_argument("--prefetch-depth", type=int, default=None,
                     help="ring depth of the streaming gather scheduler "
                          "(default: 1, or 0 with --no-prefetch)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="gradient-accumulation microbatches for train "
+                         "cells (required >= 2 for --cross-step-pipeline)")
+    ap.add_argument("--async-grad-reduce", action="store_true",
+                    help="lower train cells with the async pod-axis "
+                         "gradient-reduce stream")
+    ap.add_argument("--cross-step-pipeline", action="store_true",
+                    help="lower the steady-state cross-step-pipelined "
+                         "train step (implies the carry in the input "
+                         "signature; needs --async-grad-reduce and "
+                         "--microbatch >= 2)")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x cell) on both meshes")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.cross_step_pipeline and (not args.async_grad_reduce
+                                     or args.microbatch < 2):
+        # catch flag misuse at the CLI, not as a per-cell "system bug"
+        # traceback inside the sweep loop
+        ap.error("--cross-step-pipeline requires --async-grad-reduce "
+                 "and --microbatch >= 2")
 
     RESULTS_DIR.mkdir(exist_ok=True)
     results = []
@@ -201,7 +233,10 @@ def main():
             r = dryrun_cell(arch, cell, mp, args.mode,
                             prefetch=not args.no_prefetch,
                             prefetch_depth=args.prefetch_depth,
-                            mode_overrides=overrides)
+                            mode_overrides=overrides,
+                            microbatch=args.microbatch,
+                            async_grad_reduce=args.async_grad_reduce,
+                            cross_step=args.cross_step_pipeline)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,

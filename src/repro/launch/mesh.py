@@ -29,9 +29,26 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     return _compat_make_mesh(shape, axes)
 
 
-def make_smoke_mesh(n_devices: Optional[int] = None):
-    """Tiny mesh over locally available devices for CPU smoke tests."""
+def make_smoke_mesh(n_devices: Optional[int] = None,
+                    multi_pod: bool = False):
+    """Tiny mesh over locally available devices for CPU smoke tests.
+
+    multi_pod carves a 2-wide pod axis off the front (needs >= 8
+    devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    so the DCN-facing scheduler streams -- stage-1 prefetch, async grad
+    reduce, the cross-step pipeline -- are exercisable in smoke runs.
+    """
     n = n_devices or len(jax.devices())
+    if multi_pod:
+        if n < 8:
+            # never fall through silently: the pod-less mesh would gate
+            # every DCN stream off and the run would pass vacuously
+            raise ValueError(
+                f"multi_pod smoke mesh needs >= 8 devices, have {n}; "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        model = math.gcd(n // 2, 2)
+        return make_mesh((2, n // 2 // model, model),
+                         ("pod", "data", "model"))
     model = math.gcd(n, 2)
     data = n // model
     return make_mesh((data, model), ("data", "model"))

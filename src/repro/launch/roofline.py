@@ -284,7 +284,9 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
                     stats: CollectiveStats, cfg, cell,
                     n_chips: int, prefetch: Any = False,
                     inflight_bytes: float = 0.0,
-                    group_bytes: Optional[Dict[str, Any]] = None
+                    group_bytes: Optional[Dict[str, Any]] = None,
+                    cross_step: bool = False,
+                    cross_step_bytes: float = 0.0
                     ) -> Dict[str, Any]:
     """Derive the three roofline terms, plus -- when the streaming
     gather scheduler's prefetch is active -- the overlap credit: the
@@ -311,6 +313,15 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     under per-tensor mixed sharding it shows which group pays which
     tier (host cache vs ring slots vs regather), echoed verbatim as
     ``groups``.
+
+    ``cross_step``/``cross_step_bytes`` describe scheduler stream 3 (the
+    cross-step pipelined optimizer epilogue): the bandwidth model is
+    unchanged -- per-step DCN volume is byte-identical, the once-per-step
+    epilogue collectives merely move to the top of the next step where
+    they overlap its first-microbatch prologue -- so the stream's
+    visible side here is its HBM price, the step-boundary carry bytes
+    (core/schedule.py:cross_step_buffer_bytes), echoed under
+    ``cross_step`` for dry-run consumers.
     """
     depth = int(prefetch)
     compute_t = flops_per_chip / PEAK_FLOPS
@@ -330,6 +341,10 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     hlo_total = flops_per_chip * n_chips
     return {
         "groups": dict(group_bytes or {}),
+        "cross_step": {
+            "enabled": bool(cross_step),
+            "carry_buffer_bytes_per_chip": float(cross_step_bytes),
+        },
         "prefetch": {
             "enabled": depth > 0,
             "depth": depth,

@@ -36,7 +36,9 @@ from repro.runtime.fault_tolerance import (FailureInjector, HeartbeatMonitor,
 def build(args):
     if args.smoke:
         cfg = get_smoke_config(args.arch)
-        mesh = make_smoke_mesh()
+        # --multi-pod with --smoke carves a 2-wide pod axis (>= 8 local
+        # devices) so the DCN-facing streams run on the toy mesh too
+        mesh = make_smoke_mesh(multi_pod=args.multi_pod)
         cell = ShapeCell("smoke_train", "train", args.seq_len or 128,
                          args.batch or 8)
     else:
@@ -58,7 +60,8 @@ def build(args):
                         prefetch=(args.prefetch or None
                                   if args.prefetch_depth is None else None),
                         prefetch_depth=args.prefetch_depth,
-                        async_grad_reduce=args.async_grad_reduce)
+                        async_grad_reduce=args.async_grad_reduce,
+                        cross_step_pipeline=args.cross_step_pipeline)
     run = RunConfig(model=cfg, shape=cell, system=sysc,
                     optimizer=OptimizerConfig(
                         lr=args.lr, total_steps=args.steps,
@@ -72,6 +75,14 @@ class RunState:
         self.run, self.mesh, self.args = run, mesh, args
         self.bundle = StepBundle(run, mesh)
         self.step_fn = self.bundle.make_train_step()
+        # cross-step pipeline (stream 3): the steady-state step carries
+        # the previous step's optimizer epilogue; prime fills the
+        # pipeline, flush drains it (end of run / before checkpoints)
+        self.cross_step = self.bundle.cross_step
+        self.carry = None
+        if self.cross_step:
+            self.prime_fn = self.bundle.make_train_prime()
+            self.flush_fn = self.bundle.make_train_flush()
         params = self.bundle.init_all_params(seed=run.seed)
         self.train_p, self.frozen_p = self.bundle.split(params)
         self.opt = jax.jit(functools.partial(
@@ -83,11 +94,45 @@ class RunState:
                                     enc_embed_dim=enc_dim)
         self.metrics_log = []
 
+    def do_train_step(self, batch):
+        """One training step under whichever schedule is live. With the
+        cross-step pipeline the first call primes the carry (no update);
+        call flush_carry() to drain before reading/persisting state.
+        Sets ``last_primed``: a primed step's grad_norm is not known yet
+        (the piped step reports the PREVIOUS step's norm, the flush
+        reports the last one) -- metric consumers must not read a prime
+        row's 0.0 as a real norm."""
+        self.last_primed = False
+        if not self.cross_step:
+            self.train_p, self.opt, m = self.step_fn(
+                self.train_p, self.frozen_p, self.opt, batch)
+        elif self.carry is None:
+            self.last_primed = True
+            self.carry, m = self.prime_fn(
+                self.train_p, self.frozen_p, self.opt, batch)
+        else:
+            self.train_p, self.opt, self.carry, m = self.step_fn(
+                self.train_p, self.frozen_p, self.opt, self.carry, batch)
+        return m
+
+    def flush_carry(self):
+        """Finalize the outstanding cross-step epilogue, if any, so
+        params/opt reflect every step taken (the next step re-primes).
+        The flushed grad_norm -- the last step's, otherwise lost -- is
+        appended to metrics_log as a ``flush`` row."""
+        if self.carry is not None:
+            self.train_p, self.opt, m = self.flush_fn(
+                self.train_p, self.opt, self.carry)
+            self.carry = None
+            self.metrics_log.append(
+                {"flush": True, "grad_norm": float(m["grad_norm"])})
+
     def state_tree(self):
         return {"params": self.train_p, "opt": self.opt}
 
     def load_state(self, tree):
         self.train_p, self.opt = tree["params"], tree["opt"]
+        self.carry = None
 
 
 def main(argv=None):
@@ -110,6 +155,12 @@ def main(argv=None):
                     help="overlap microbatch i's pod-axis grad reduce "
                          "with microbatch i+1's forward (needs "
                          "--microbatch > 1)")
+    ap.add_argument("--cross-step-pipeline", action="store_true",
+                    help="carry step i's optimizer epilogue (last pod "
+                         "reduce + update + widened gather) across the "
+                         "step boundary and overlap it with step i+1's "
+                         "first forward (needs --async-grad-reduce and "
+                         "--microbatch >= 2; bit-identical results)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--peft", action="store_true")
@@ -135,16 +186,23 @@ def main(argv=None):
     def do_step(step: int):
         injector.maybe_fail(step)
         batch = st.loader.get(step)
-        st.train_p, st.opt, m = st.step_fn(st.train_p, st.frozen_p,
-                                           st.opt, batch)
+        m = st.do_train_step(batch)
         loss = float(m["loss"])
-        st.metrics_log.append({"step": step, "loss": loss,
-                               "grad_norm": float(m["grad_norm"])})
+        row = {"step": step, "loss": loss,
+               "grad_norm": float(m["grad_norm"])}
+        if st.last_primed:
+            # pipeline-fill step: no norm yet (the next piped step
+            # reports this step's, the flush reports the last one)
+            row["primed"] = True
+        st.metrics_log.append(row)
         if step % max(args.steps // 20, 1) == 0:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"gnorm {float(m['grad_norm']):.3f}")
 
     def save(step: int):
+        # checkpoints always persist post-update state: drain the
+        # cross-step carry first (the pipeline re-primes next step)
+        st.flush_carry()
         ckpt.save(step, st.state_tree(), blocking=False)
 
     def restore() -> int:
@@ -159,12 +217,15 @@ def main(argv=None):
     result = run_with_restarts(
         args.steps, do_step, save, restore,
         checkpoint_every=args.ckpt_every, monitor=monitor, heartbeat=hb)
+    st.flush_carry()
     hb.stop()
     ckpt.wait()
     dt = time.time() - t0
     toks = args.steps * st.run.shape.global_batch * st.run.shape.seq_len
+    final_loss = next(m["loss"] for m in reversed(st.metrics_log)
+                      if "loss" in m)
     print(f"done: {result} | {dt:.1f}s | {toks/dt:.0f} tok/s | "
-          f"final loss {st.metrics_log[-1]['loss']:.4f}")
+          f"final loss {final_loss:.4f}")
     return st
 
 

@@ -1,0 +1,338 @@
+"""Cross-step pipelined optimizer stream (scheduler stream 3) tests:
+construction-time validation, the strategy capability surface, bit
+parity of the prime/piped/flush schedule against the fused step on
+uniform AND mixed-mode bundles, byte-identical steady-state DCN volume,
+carry-buffer accounting, planner demotion order (cross-step before
+prefetch depth before device fraction), and the dry-run/roofline JSON
+schema carrying ``cross_step_buffer_bytes``."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ModelConfig, MoEConfig, OptimizerConfig,
+                                RunConfig, ShapeCell, SystemConfig)
+from repro.core.engine import StepBundle
+from repro.core.strategy import CompositeStrategy, get_strategy
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=3, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                    qkv_bias=True)
+MOE = ModelConfig(name="t-moe", family="moe", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=256,
+                  moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64))
+CELL = ShapeCell("t", "train", 64, 8)
+MIXED_RULES = (("blocks.*.moe.we_*", "mics"), ("embed", "hier"))
+
+
+def make_bundle(mesh, cfg=DENSE, microbatch=2, **sys_kw):
+    sysd = dict(mode="fcdp", min_shard_size=8, async_grad_reduce=True)
+    sysd.update(sys_kw)
+    run = RunConfig(model=cfg, shape=CELL, system=SystemConfig(**sysd),
+                    optimizer=OptimizerConfig(total_steps=8, warmup_steps=2,
+                                              lr=1e-3),
+                    microbatch=microbatch)
+    return StepBundle(run, mesh)
+
+
+def make_batches(n, vocab=256):
+    out = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        out.append({"ids": jnp.asarray(
+                        rng.integers(1, vocab, (CELL.global_batch,
+                                                CELL.seq_len)), jnp.int32),
+                    "labels": jnp.asarray(
+                        rng.integers(1, vocab, (CELL.global_batch,
+                                                CELL.seq_len)), jnp.int32),
+                    "mask": jnp.ones((CELL.global_batch, CELL.seq_len),
+                                     bool)})
+    return out
+
+
+def _init(bundle):
+    from repro.optim.adamw import init_opt_state
+    params = bundle.init_all_params(seed=0)
+    tp, fp = bundle.split(params)
+    opt = jax.jit(functools.partial(
+        init_opt_state, sys=bundle.run.system))(tp)
+    return tp, fp, opt
+
+
+def run_fused(bundle, batches):
+    tp, fp, opt = _init(bundle)
+    step = bundle.make_train_step()
+    losses, gnorms = [], []
+    for b in batches:
+        tp, opt, m = step(tp, fp, opt, b)
+        losses.append(float(m["loss"]))
+        gnorms.append(float(m["grad_norm"]))
+    return losses, gnorms, [np.asarray(x, np.float32) for x in tp]
+
+
+def run_piped(bundle, batches):
+    tp, fp, opt = _init(bundle)
+    prime, piped = bundle.make_train_prime(), bundle.make_train_step()
+    flush = bundle.make_train_flush()
+    losses, gnorms = [], []
+    carry, m = prime(tp, fp, opt, batches[0])
+    losses.append(float(m["loss"]))
+    for b in batches[1:]:
+        tp, opt, carry, m = piped(tp, fp, opt, carry, b)
+        losses.append(float(m["loss"]))
+        gnorms.append(float(m["grad_norm"]))
+    tp, opt, m = flush(tp, opt, carry)
+    gnorms.append(float(m["grad_norm"]))
+    return losses, gnorms, [np.asarray(x, np.float32) for x in tp]
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation + capability surface
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="async_grad_reduce"):
+        SystemConfig(cross_step_pipeline=True)
+    ok = SystemConfig(cross_step_pipeline=True, async_grad_reduce=True)
+    assert ok.cross_step_pipeline
+    with pytest.raises(ValueError, match="microbatch"):
+        RunConfig(model=DENSE, shape=CELL, system=ok)
+    with pytest.raises(ValueError, match="microbatch"):
+        RunConfig(model=DENSE, shape=CELL, system=ok, microbatch=1)
+    run = RunConfig(model=DENSE, shape=CELL, system=ok, microbatch=2)
+    # replace() re-validates: dropping accumulation must be rejected too
+    with pytest.raises(ValueError, match="microbatch"):
+        run.replace(microbatch=0)
+
+
+def test_strategy_capability():
+    class M3:
+        axis_names = ("pod", "data", "model")
+
+    class M2:
+        axis_names = ("data", "model")
+
+    on = SystemConfig(async_grad_reduce=True, cross_step_pipeline=True)
+    off = SystemConfig(async_grad_reduce=True)
+    for mode in ("zero3", "zeropp", "fcdp"):
+        s = get_strategy(mode)
+        assert s.supports_cross_step
+        assert s.cross_step_active(on, M3())
+        assert not s.cross_step_active(on, M2())      # no slow tier
+        assert not s.cross_step_active(off, M3())     # flag off
+    for mode in ("mics", "hier"):
+        s = get_strategy(mode)
+        assert not s.supports_cross_step
+        assert not s.cross_step_active(on, M3())
+    # composite: any streaming group enables the carry (the deferred
+    # epilogue then covers the single-stage groups' collectives too)
+    mixed = CompositeStrategy(get_strategy("fcdp"),
+                              {"fcdp": get_strategy("fcdp"),
+                               "mics": get_strategy("mics")})
+    assert mixed.supports_cross_step and mixed.cross_step_active(on, M3())
+    pure_rep = CompositeStrategy(get_strategy("mics"),
+                                 {"mics": get_strategy("mics"),
+                                  "hier": get_strategy("hier")})
+    assert not pure_rep.supports_cross_step
+
+
+# ---------------------------------------------------------------------------
+# Bit parity: fused vs prime/piped/flush
+# ---------------------------------------------------------------------------
+
+def test_cross_step_bit_parity_uniform(mesh3):
+    """The pipeline only moves the epilogue's latency: losses, shifted
+    grad norms, and post-update shards are bit-identical to the fused
+    schedule over a 3-step run (the acceptance criterion)."""
+    batches = make_batches(3)
+    l_off, g_off, p_off = run_fused(make_bundle(mesh3), batches)
+    l_on, g_on, p_on = run_piped(
+        make_bundle(mesh3, cross_step_pipeline=True), batches)
+    assert l_on == l_off
+    assert g_on == g_off       # piped reports step i's norm at step i+1,
+    #                            flush reports the last: same sequence
+    for a, b in zip(p_off, p_on):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cross_step_bit_parity_mixed(mesh3):
+    """Same parity on a mixed-mode bundle (fcdp trunk + mics experts +
+    hier embedding): the deferred epilogue covers the widened hier
+    reduce-scatter/all-gather and the pre-VMA replicated-grad psums of
+    the single-stage groups."""
+    batches = make_batches(2)
+    l_off, _, p_off = run_fused(
+        make_bundle(mesh3, cfg=MOE, mode_overrides=MIXED_RULES), batches)
+    on = make_bundle(mesh3, cfg=MOE, mode_overrides=MIXED_RULES,
+                     cross_step_pipeline=True)
+    assert on.cross_step
+    l_on, _, p_on = run_piped(on, batches)
+    assert l_on == l_off
+    for a, b in zip(p_off, p_on):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cross_step_comm_structure(mesh3):
+    """The steady-state piped step's per-step DCN volume is
+    byte-identical to the fused step: prime defers one reduce + one
+    epilogue, every piped step retires exactly one while deferring its
+    own."""
+    from repro.launch.roofline import collect_collectives
+
+    def collect(bundle):
+        closed = bundle.make_train_step().trace(
+            *bundle.train_input_sds()).jaxpr
+        sizes = {a: bundle.mi.size(a) for a in bundle.mi.axis_names}
+        return collect_collectives(closed, sizes)
+
+    c_off = collect(make_bundle(mesh3))
+    c_on = collect(make_bundle(mesh3, cross_step_pipeline=True))
+    for key in ("all_gather/pod", "psum_scatter/pod"):
+        np.testing.assert_allclose(c_on.by_op_axis.get(key, 0),
+                                   c_off.by_op_axis.get(key, 0), rtol=1e-6)
+    np.testing.assert_allclose(c_on.dcn_bytes, c_off.dcn_bytes, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Accounting + planner demotion order + report schema
+# ---------------------------------------------------------------------------
+
+def test_cross_step_buffer_accounting(mesh3):
+    """The step-boundary carry (storage-level g_acc + stage-1-level
+    pending) is accounted only when the stream is live, and the
+    per-group split sums to the total."""
+    from repro.core.cache import cache_bytes_per_chip
+    live = cache_bytes_per_chip(make_bundle(mesh3,
+                                            cross_step_pipeline=True))
+    assert live["cross_step"]
+    assert live["cross_step_buffer_bytes_per_chip"] > 0
+    np.testing.assert_allclose(
+        sum(g["cross_step_buffer_bytes_per_chip"]
+            for g in live["by_group"].values()),
+        live["cross_step_buffer_bytes_per_chip"])
+    # the carry strictly contains the async stream's grad buffer story:
+    # stage-1 pending + a storage-level accumulator per trainable leaf
+    for b in (make_bundle(mesh3),                       # flag off
+              make_bundle(mesh3, mode="mics",           # unwilling strategy
+                          cross_step_pipeline=True)):
+        acct = cache_bytes_per_chip(b)
+        assert not acct["cross_step"]
+        assert acct["cross_step_buffer_bytes_per_chip"] == 0.0
+
+
+def test_planner_demotes_cross_step_first(mesh3):
+    """Over budget, the planner drops the cross-step carry before
+    walking prefetch depth, before touching the device fraction."""
+    from repro.core.cache import MemoryPlanner
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8,
+                                        prefetch_depth=2,
+                                        async_grad_reduce=True,
+                                        cross_step_pipeline=True),
+                    optimizer=OptimizerConfig(total_steps=4,
+                                              warmup_steps=1),
+                    microbatch=2)
+
+    class FakePeak(MemoryPlanner):
+        def __init__(self, fit_at, **kw):
+            super().__init__(**kw)
+            self.fit_at = fit_at
+
+        def _peak(self, bundle):
+            s = bundle.run.system
+            fits = (s.device_cache_fraction, s.prefetch_depth,
+                    s.cross_step_pipeline) == self.fit_at
+            return 0 if fits else (1 << 50)
+
+    plan = FakePeak(fit_at=(1.0, 2, False)).plan(run, mesh3,
+                                                 fractions=(1.0, 0.0))
+    assert plan.fits and plan.prefetch_depth == 2 and not plan.cross_step
+    assert [(i["device_fraction"], i["prefetch_depth"], i["cross_step"])
+            for i in plan.iterations] == [(1.0, 2, True), (1.0, 2, False)]
+    assert plan.iterations[0]["cross_step_buffer_bytes"] > 0
+    assert plan.iterations[1]["cross_step_buffer_bytes"] == 0.0
+
+    # a budget that fits immediately keeps the pipeline
+    plan2 = FakePeak(fit_at=(1.0, 2, True)).plan(run, mesh3,
+                                                 fractions=(1.0, 0.0))
+    assert plan2.fits and plan2.cross_step and plan2.prefetch_depth == 2
+    assert len(plan2.iterations) == 1
+
+    # without the flag the search is exactly the old depth/fraction walk
+    run0 = run.replace(system=run.system.replace(
+        cross_step_pipeline=False))
+    plan3 = FakePeak(fit_at=(1.0, 1, False)).plan(run0, mesh3,
+                                                  fractions=(1.0, 0.0))
+    assert plan3.fits and not plan3.cross_step
+    assert [i["prefetch_depth"] for i in plan3.iterations] == [2, 1]
+
+
+def test_roofline_report_cross_step_schema():
+    """The dry-run JSON path carries the carry-buffer bytes: the report
+    echoes (enabled, carry_buffer_bytes_per_chip) without touching the
+    bandwidth terms -- per-step DCN volume is byte-identical, so stream
+    3's only visible side here is its HBM price."""
+    from repro.launch.roofline import CollectiveStats, roofline_report
+    stats = CollectiveStats()
+    stats.add("all_gather", "pod", 4e9, is_dcn=True)
+    base = roofline_report(1e13, 1e12, stats, DENSE, CELL, 8)
+    on = roofline_report(1e13, 1e12, stats, DENSE, CELL, 8,
+                         cross_step=True, cross_step_bytes=123.0)
+    assert base["cross_step"] == {"enabled": False,
+                                  "carry_buffer_bytes_per_chip": 0.0}
+    assert on["cross_step"] == {"enabled": True,
+                                "carry_buffer_bytes_per_chip": 123.0}
+    for key in ("compute_s", "memory_s", "collective_s", "dcn_s", "ici_s"):
+        assert on[key] == base[key]
+
+
+def test_dryrun_json_carries_cross_step(monkeypatch):
+    """dryrun_cell's JSON row reports the live cross-step flag, a
+    nonzero carry-buffer size, and the roofline echo (toy mesh via the
+    production-mesh builder, as in test_composite)."""
+    import dataclasses
+
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_mesh
+    monkeypatch.setattr(
+        dr, "make_production_mesh",
+        lambda multi_pod=False: make_mesh((2, 2, 2),
+                                          ("pod", "data", "model")))
+    monkeypatch.setattr(
+        dr, "get_config", lambda arch: dataclasses.replace(DENSE, name=arch))
+    monkeypatch.setattr(dr, "cell_supported", lambda cfg, cell: (True, ""))
+    monkeypatch.setattr(dr, "shape_cell", lambda name: CELL)
+    r = dr.dryrun_cell("toy", "train_4k", True, "fcdp",
+                       system_overrides={"min_shard_size": 8,
+                                         "loss_chunk": 0},
+                       verbose=False, microbatch=2,
+                       async_grad_reduce=True, cross_step=True)
+    assert r["status"] == "ok"
+    assert r["cross_step"]
+    assert r["cross_step_buffer_bytes_per_chip"] > 0
+    assert r["roofline"]["cross_step"] == {
+        "enabled": True,
+        "carry_buffer_bytes_per_chip": r["cross_step_buffer_bytes_per_chip"]}
+    # and off by default
+    r0 = dr.dryrun_cell("toy", "train_4k", True, "fcdp",
+                        system_overrides={"min_shard_size": 8,
+                                          "loss_chunk": 0},
+                        verbose=False)
+    assert not r0["cross_step"]
+    assert r0["cross_step_buffer_bytes_per_chip"] == 0.0
+
+
+def test_train_input_sds_carries_cross_step(mesh3):
+    """StepBundle.train_input_sds grows the carry argument exactly when
+    the pipeline is live, and the piped step lowers against it (the
+    planner/dry-run path)."""
+    b = make_bundle(mesh3, cross_step_pipeline=True)
+    sds = b.train_input_sds()
+    assert len(sds) == 5
+    carry = sds[3]
+    assert set(carry) == {"g_acc", "pending"}
+    assert len(carry["g_acc"]) == len(b.train_idx)
+    b.make_train_step().lower(*sds)      # must not raise
+    assert len(make_bundle(mesh3).train_input_sds()) == 4
