@@ -340,6 +340,53 @@ def bench_xstep_smoke(rows):
     return result
 
 
+def bench_restart_smoke(rows):
+    """--smoke crash-resume axis: drive the REAL launch driver (prime/
+    piped/flush + checkpoint/restart) twice on the toy multi-pod mesh --
+    once uninterrupted, once with a FailureInjector crash at a piped
+    step past the last checkpoint -- and assert the restarted run's
+    per-step losses and final params are bit-identical to the
+    uninterrupted trace (the carry rides the manifest-v2 checkpoint, so
+    nothing is lost or double-applied). Writes
+    results/bench_smoke_restart.json (uploaded by CI next to the other
+    bench_smoke*.json artifacts)."""
+    import tempfile
+    import numpy as np
+    from repro.launch.train import main as train_main
+
+    def drive(ckpt_dir, fail_at):
+        argv = ["--arch", "gemma-2b", "--smoke", "--multi-pod",
+                "--steps", "6", "--batch", "8", "--seq-len", "64",
+                "--lr", "1e-3", "--microbatch", "2",
+                "--async-grad-reduce", "--cross-step-pipeline",
+                "--ckpt-dir", ckpt_dir, "--ckpt-every", "2"]
+        if fail_at:
+            argv += ["--fail-at", str(fail_at)]
+        st = train_main(argv)
+        per_step = {}
+        for row in st.metrics_log:      # last occurrence wins (replays)
+            if "step" in row:
+                per_step[row["step"]] = row["loss"]
+        return per_step, float(sum(
+            np.asarray(x, np.float64).sum() for x in st.train_p))
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        clean_losses, clean_sum = drive(d1, None)
+        crash_losses, crash_sum = drive(d2, 3)   # past the step-2 ckpt
+    assert crash_losses == clean_losses, (clean_losses, crash_losses)
+    assert crash_sum == clean_sum
+    for s in sorted(clean_losses):
+        rows.append((f"restart_smoke/step{s}_loss", 0, clean_losses[s]))
+    result = {"smoke": True, "fail_at": 3,
+              "losses_clean": clean_losses, "losses_resumed": crash_losses,
+              "params_sum_clean": clean_sum, "params_sum_resumed": crash_sum,
+              "bit_identical": True}
+    with open(RESULTS / "bench_smoke_restart.json", "w") as f:
+        json.dump(result, f, indent=2, default=float)
+    return result
+
+
 def _cell(arch, cell, mode, multi_pod=True, overrides=None):
     from repro.launch.dryrun import dryrun_cell
     # paper-table benches compare modes on the sequential schedule:
@@ -601,7 +648,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI path: kernel oracles + toy-mesh comm "
                          "schema check + mixed-mode dry-run + cross-step "
-                         "on/off axis")
+                         "on/off axis + crash-resume parity")
     ap.add_argument("--mode-override", action="append", default=[],
                     metavar="GLOB=MODE",
                     help="per-tensor strategy override applied on top of "
@@ -616,6 +663,7 @@ def main() -> None:
     benches = ([("comm_smoke", bench_comm_smoke),
                 ("mixed_smoke", bench_mixed_smoke),
                 ("xstep_smoke", bench_xstep_smoke),
+                ("restart_smoke", bench_restart_smoke),
                 ("kernels", bench_kernels)]
                if args.smoke else BENCHES)
     RESULTS.mkdir(exist_ok=True)

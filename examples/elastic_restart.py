@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from jax.sharding import NamedSharding
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
                                 SystemConfig)
@@ -24,6 +23,7 @@ from repro.core.engine import StepBundle
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
 from repro.launch.mesh import make_mesh
 from repro.optim.adamw import init_opt_state
+from repro.runtime.elastic import mesh_meta, reshard_state
 
 
 def run_steps(bundle, tp, fp, opt, loader, start, n):
@@ -53,19 +53,17 @@ def main():
     print(f"phase 1 (2x2x2 'two pods'): losses {l1[0]:.3f} -> {l1[-1]:.3f}")
 
     ckpt = Checkpointer(tempfile.mkdtemp())
-    ckpt.save(6, {"params": tp, "opt": opt}, blocking=True)
+    ckpt.save(6, {"params": tp, "opt": opt}, blocking=True,
+              meta=mesh_meta(big))
     print("checkpoint saved; simulating pod loss...")
 
     small = make_mesh((2, 2), ("data", "model"))             # one "pod"
     b2 = StepBundle(run, small)
-    sh = [NamedSharding(small, b2.leaf_specs[i]) for i in b2.train_idx]
-    restored = ckpt.restore(6, {"params": tp, "opt": opt},
-                            shardings={"params": sh,
-                                       "opt": {"m": sh, "v": sh,
-                                               "master": sh,
-                                               "step": NamedSharding(
-                                                   small,
-                                                   jax.sharding.PartitionSpec())}})
+    # carry-aware restore under the new bundle's shardings (a cross-step
+    # carry, were one saved, would be invalidated here: mesh change)
+    restored, carry_invalidated = reshard_state(
+        ckpt, 6, b2, {"params": tp, "opt": opt})
+    assert not carry_invalidated                 # fused run: no carry
     loader2 = ShardedLoader(SyntheticPackedLM(cfg, cell, DataConfig(0)),
                             small, b2.batch_spec(cell))
     tp2, fp2 = restored["params"], []

@@ -180,12 +180,21 @@ def flatten_with_path(tree, is_leaf: Optional[Callable] = None):
 _MAKE_MESH_PARAMS = set(inspect.signature(jax.make_mesh).parameters)
 
 
-def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+def make_mesh(shape: Sequence[int], axes: Sequence[str], devices=None):
     """jax.make_mesh with Auto axis types where the kwarg exists; older
-    JAX has no axis-type concept (everything is Auto)."""
+    JAX has no axis-type concept (everything is Auto). ``devices``
+    restricts the mesh to an explicit device subset (elastic remesh over
+    the survivors); without it jax fills the mesh from all visible
+    devices."""
     shape, axes = tuple(shape), tuple(axes)
+    kw = {}
+    if devices is not None:
+        if "devices" in _MAKE_MESH_PARAMS:
+            kw["devices"] = tuple(devices)
+        else:  # pragma: no cover - very old jax: build the Mesh directly
+            import numpy as _np
+            return jax.sharding.Mesh(
+                _np.asarray(devices, dtype=object).reshape(shape), axes)
     if "axis_types" in _MAKE_MESH_PARAMS and hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)

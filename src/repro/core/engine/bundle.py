@@ -114,6 +114,29 @@ class StepBundle:
                 sharding=NamedSharding(self.mesh, self.leaf_specs[i])))
         return out
 
+    # -- persisted-state shardings (checkpoint/restart) ----------------------
+    def state_shardings(self, with_carry: bool = False):
+        """NamedSharding tree for the persisted training state
+        ``{"params", "opt"(, "carry")}`` under THIS bundle's mesh -- the
+        restore placement used by ``runtime/elastic.reshard_state`` and
+        the restart driver. Optimizer moments/master are placed under
+        the (possibly wider) opt specs; the carry section uses the
+        cross-step carry layout and is only meaningful when
+        ``self.cross_step`` is live."""
+        train_sh = [NamedSharding(self.mesh, self.leaf_specs[i])
+                    for i in self.train_idx]
+        opt_sh = [NamedSharding(self.mesh, self.full_specs[i])
+                  for i in self.train_idx]
+        out = {"params": train_sh,
+               "opt": {"m": opt_sh, "v": opt_sh, "master": opt_sh,
+                       "step": NamedSharding(self.mesh, P())}}
+        if with_carry:
+            from repro.core.engine.train import cross_step_carry_layout
+            out["carry"] = {
+                k: [NamedSharding(self.mesh, spec) for spec, _, _ in v]
+                for k, v in cross_step_carry_layout(self).items()}
+        return out
+
     # -- batch specs ------------------------------------------------------
     def batch_spec(self, cell: ShapeCell) -> Dict[str, P]:
         dp = self.mi.dp

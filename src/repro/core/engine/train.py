@@ -143,6 +143,21 @@ def cross_step_carry_layout(bundle):
     return out
 
 
+def cross_step_carry_signature(bundle):
+    """``[(global_shape, dtype_str), ...]`` of the carry leaves in
+    checkpoint flatten order (the ``carry`` dict's keys sort g_acc before
+    pending) -- what ``runtime/elastic.reshard_state`` compares against a
+    saved manifest's carry section to decide mesh-compatibility. The
+    leading partial dim is mesh-shaped (the product of the unmentioned
+    axes' sizes), so a mesh change shows up here even when the payload
+    shapes agree; a carry that fails this check must be invalidated and
+    re-primed, never ``device_put`` as stale partials."""
+    layout = cross_step_carry_layout(bundle)
+    return [(tuple(shape), str(jnp.dtype(dtype)))
+            for key in sorted(layout)
+            for _, shape, dtype in layout[key]]
+
+
 def _lift(x, axes):
     """pvary ``x`` over whichever of ``axes`` its vma is missing (no-op
     on pre-VMA JAX): carry outputs must vary over every axis their out

@@ -64,6 +64,17 @@ them, so only the collectives' latency moves, never the values.
 the stream is live; :func:`cross_step_buffer_bytes` is the analytic
 per-chip size of the carried buffers.
 
+Crash safety: the carry is part of the persisted training state, not a
+transient. The restart driver checkpoints it as a manifest-v2 ``carry``
+section (checkpoint/checkpointer.py) so a checkpoint taken mid-pipeline
+round-trips bit-exactly; on a step failure the driver flushes the
+in-flight epilogue before restoring (``run_with_restarts(flush_fn=...)``)
+so no completed step's update is dropped; and because the carry's
+leading partial dims are mesh-shaped, ``runtime/elastic.reshard_state``
+invalidates it on any mesh change and the driver re-runs the last step
+to re-prime (``engine/train.py:cross_step_carry_signature`` is the
+compatibility check).
+
 Memory accounting
 -----------------
 :func:`prefetch_buffer_bytes` is the analytic per-chip size of the k

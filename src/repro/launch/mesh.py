@@ -24,9 +24,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _compat_make_mesh(shape, axes)
 
 
-def make_mesh(shape: Sequence[int], axes: Sequence[str]):
-    """Arbitrary mesh with Auto axis types (smoke tests, elastic re-mesh)."""
-    return _compat_make_mesh(shape, axes)
+def make_mesh(shape: Sequence[int], axes: Sequence[str], devices=None):
+    """Arbitrary mesh with Auto axis types (smoke tests, elastic re-mesh).
+    ``devices`` restricts the mesh to an explicit subset -- the elastic
+    path passes the surviving devices so a shrunk mesh never spans chips
+    the surviving shape does not cover."""
+    return _compat_make_mesh(shape, axes, devices=devices)
 
 
 def make_smoke_mesh(n_devices: Optional[int] = None,

@@ -28,6 +28,7 @@ from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.optim.adamw import init_opt_state
+from repro.runtime.elastic import mesh_meta, reshard_state
 from repro.runtime.fault_tolerance import (FailureInjector, HeartbeatMonitor,
                                            StragglerMonitor,
                                            run_with_restarts)
@@ -80,6 +81,9 @@ class RunState:
         # pipeline, flush drains it (end of run / before checkpoints)
         self.cross_step = self.bundle.cross_step
         self.carry = None
+        self.steps_taken = 0     # steps run since init/restore (lets the
+        #                          pre-loop restore of a just-written
+        #                          step-0 seed skip the read-back)
         if self.cross_step:
             self.prime_fn = self.bundle.make_train_prime()
             self.flush_fn = self.bundle.make_train_flush()
@@ -103,6 +107,7 @@ class RunState:
         reports the last one) -- metric consumers must not read a prime
         row's 0.0 as a real norm."""
         self.last_primed = False
+        self.steps_taken += 1
         if not self.cross_step:
             self.train_p, self.opt, m = self.step_fn(
                 self.train_p, self.frozen_p, self.opt, batch)
@@ -128,11 +133,21 @@ class RunState:
                 {"flush": True, "grad_norm": float(m["grad_norm"])})
 
     def state_tree(self):
-        return {"params": self.train_p, "opt": self.opt}
+        """The persisted training state. The cross-step carry rides
+        along exactly when it is live, so a checkpoint taken
+        mid-pipeline round-trips bit-exactly (manifest v2 records the
+        carry section; restore validates it against the mesh)."""
+        tree = {"params": self.train_p, "opt": self.opt}
+        if self.carry is not None:
+            tree["carry"] = self.carry
+        return tree
 
     def load_state(self, tree):
         self.train_p, self.opt = tree["params"], tree["opt"]
-        self.carry = None
+        # a restored carry resumes the pipeline mid-flight; without one
+        # the next do_train_step re-primes
+        self.carry = tree.get("carry")
+        self.steps_taken = 0
 
 
 def main(argv=None):
@@ -200,23 +215,59 @@ def main(argv=None):
                   f"gnorm {float(m['grad_norm']):.3f}")
 
     def save(step: int):
-        # checkpoints always persist post-update state: drain the
-        # cross-step carry first (the pipeline re-primes next step)
-        st.flush_carry()
-        ckpt.save(step, st.state_tree(), blocking=False)
+        # the checkpoint is taken mid-pipeline: the cross-step carry is
+        # persisted as a manifest-v2 carry section (not flushed), so a
+        # restart resumes the piped schedule bit-identically to an
+        # uninterrupted run; the mesh signature in meta lets an elastic
+        # restore detect that a carry never survives a mesh change
+        ckpt.save(step, st.state_tree(), blocking=False,
+                  meta=mesh_meta(st.mesh))
 
     def restore() -> int:
+        # a crash can land while an async save is still writing: drain
+        # it first, or latest_step() would miss the in-flight checkpoint
+        # and silently resume a full interval earlier
+        ckpt.wait()
         latest = ckpt.latest_step()
-        if latest is None:
+        if latest == 0 and st.steps_taken == 0 and st.carry is None:
+            # the pre-loop restore of the step-0 seed we just wrote:
+            # live state IS the checkpoint, skip the read-back
             return 0
-        st.load_state(ckpt.restore(latest, st.state_tree()))
+        if latest is None:
+            # nothing persisted yet: drain any in-flight epilogue so the
+            # live state is post-update, and restart from the top
+            st.flush_carry()
+            return 0
+        state, carry_invalidated = reshard_state(
+            ckpt, latest, st.bundle,
+            {"params": st.train_p, "opt": st.opt})
+        st.load_state(state)
+        if carry_invalidated:
+            # the saved carry could not be restored (mesh change, or the
+            # pipeline is off in this run): resume one step earlier --
+            # re-running the last step re-primes the pipeline and
+            # rebuilds the identical carry, so its update is re-derived
+            # rather than silently lost
+            resume = max(latest - 1, 0)
+            print(f"restored checkpoint at step {latest}; cross-step "
+                  f"carry invalidated -> re-running step {resume} to "
+                  "re-prime")
+            return resume
         print(f"restored checkpoint at step {latest}")
         return latest
+
+    # persist the initial state before the first step: a failure inside
+    # the first checkpoint interval then restores to a well-defined step
+    # 0 instead of replaying onto partially-trained live state
+    if ckpt.latest_step() is None:
+        ckpt.save(0, st.state_tree(), blocking=True,
+                  meta=mesh_meta(st.mesh))
 
     t0 = time.time()
     result = run_with_restarts(
         args.steps, do_step, save, restore,
-        checkpoint_every=args.ckpt_every, monitor=monitor, heartbeat=hb)
+        checkpoint_every=args.ckpt_every, monitor=monitor, heartbeat=hb,
+        flush_fn=st.flush_carry)
     st.flush_carry()
     hb.stop()
     ckpt.wait()

@@ -4,18 +4,29 @@ training state.
 The flow on a pod loss (DCN partition, hardware failure):
   1. the launcher detects missing hosts (heartbeat / init timeout),
   2. `remesh()` builds the largest valid mesh from what's left
-     (2x16x16 -> 16x16: drop the 'pod' axis; fewer chips -> shrink 'data'),
+     (2x16x16 -> 16x16: drop the 'pod' axis; fewer chips -> shrink 'data')
+     over exactly the surviving devices,
   3. a new StepBundle is built against the new mesh, and the last
      checkpoint is restored under the new shardings (global batch is
      preserved -- per-device batch grows, or grad-accumulation kicks in).
 
 Checkpoints store global arrays (see checkpoint/), so restore-under-a-
-different-mesh is just device_put with the new sharding tree.
+different-mesh is just device_put with the new sharding tree -- for
+everything EXCEPT the cross-step carry (scheduler stream 3): its leaves
+carry a leading partial dim sharded over mesh axes, i.e. they are
+mesh-shaped pre-reduction partials, not global state. `reshard_state`
+therefore restores the carry bit-exactly only when the saved mesh
+signature and the carry layout of the new bundle both match; on any
+mesh change the carry is invalidated (dropped via a section-filtered
+restore, never `device_put` as stale partials) and the caller must
+resume one step earlier so the restart driver re-primes the pipeline --
+re-running the last step rebuilds the identical carry, so no update is
+silently lost.
 """
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 
@@ -36,26 +47,82 @@ def surviving_mesh_shape(n_devices: int, tp: int = 16
 
 
 def remesh(n_devices: Optional[int] = None, tp: int = 16):
-    """Build the best mesh over currently-visible devices."""
+    """Build the best mesh over currently-visible devices. The mesh is
+    laid over exactly the first prod(shape) survivors -- NOT all visible
+    devices: when the surviving shape covers fewer chips than remain
+    visible (e.g. 300 survivors -> a 256-chip single-pod mesh), the
+    excess devices must not be folded into the mesh."""
     avail = len(jax.devices()) if n_devices is None else n_devices
     shape, axes = surviving_mesh_shape(avail, tp)
     used = math.prod(shape)
-    return make_mesh(shape, axes)
+    return make_mesh(shape, axes, devices=jax.devices()[:used])
 
 
-def reshard_state(ckpt, step: int, bundle, example_tree):
-    """Restore a checkpoint under a (possibly different) bundle's mesh.
+def _mesh_signature(mesh) -> dict:
+    return {"shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+            "axes": list(mesh.axis_names)}
 
-    bundle: the new StepBundle; example_tree: matching structure of the
-    saved state (train_params list, opt_state, ...).
+
+def mesh_meta(mesh) -> dict:
+    """Manifest ``meta`` entry recording the mesh a checkpoint was taken
+    on -- what `reshard_state` compares to detect a mesh change (a
+    cross-step carry never survives one)."""
+    return {"mesh": _mesh_signature(mesh)}
+
+
+def _carry_compatible(ckpt_manifest: dict, bundle) -> bool:
+    """Whether the saved carry section can be restored bit-exactly under
+    ``bundle``: the cross-step pipeline must be live, the saved mesh
+    signature (when recorded) must equal the new bundle's, and the saved
+    carry shapes/dtypes must match the new carry layout exactly."""
+    if not bundle.cross_step:
+        return False
+    saved_mesh = ckpt_manifest.get("meta", {}).get("mesh")
+    if saved_mesh is not None and saved_mesh != _mesh_signature(bundle.mesh):
+        return False
+    from repro.core.engine.train import cross_step_carry_signature
+    saved = [(tuple(l["shape"]), l["dtype"])
+             for l in ckpt_manifest.get("leaves", [])
+             if l.get("section") == "carry"]
+    return saved == cross_step_carry_signature(bundle)
+
+
+def reshard_state(ckpt, step: int, bundle, example_tree: Any
+                  ) -> Tuple[Any, bool]:
+    """Restore a checkpoint under a (possibly different) bundle's mesh,
+    carry-aware.
+
+    bundle: the new StepBundle; example_tree: ``{"params": [...],
+    "opt": {...}}`` matching the saved params/opt sections (leaf values
+    may be arrays or ShapeDtypeStructs -- only structure is read; the
+    carry example, when one is restorable, is derived from the bundle).
+
+    Returns ``(state, carry_invalidated)``. ``state["carry"]`` is
+    present exactly when the checkpoint held a carry AND it is
+    bit-exactly restorable under this bundle (same mesh signature, same
+    carry layout). ``carry_invalidated`` is True when a saved carry had
+    to be dropped (mesh change, or ``cross_step_pipeline`` off at
+    restore) -- the caller must then resume at ``saved_step - 1`` so the
+    driver re-primes the pipeline by re-running the last step, instead
+    of silently losing its update.
     """
-    from jax.sharding import NamedSharding
-    train_sh = [NamedSharding(bundle.mesh, bundle.leaf_specs[i])
-                for i in bundle.train_idx]
-    shardings = {
-        "params": train_sh,
-        "opt": {"m": train_sh, "v": train_sh, "master": train_sh,
-                "step": NamedSharding(
-                    bundle.mesh, jax.sharding.PartitionSpec())},
-    }
-    return ckpt.restore(step, example_tree, shardings=shardings)
+    manifest = ckpt.manifest(step)
+    has_carry = any(l.get("section") == "carry"
+                    for l in manifest.get("leaves", []))
+    if not has_carry:
+        return (ckpt.restore(step, example_tree,
+                             shardings=bundle.state_shardings()), False)
+    if _carry_compatible(manifest, bundle):
+        example = dict(example_tree)
+        example["carry"] = bundle.cross_step_carry_sds()
+        return (ckpt.restore(step, example,
+                             shardings=bundle.state_shardings(
+                                 with_carry=True)), False)
+    # mesh-shaped carry under a different mesh (or pipeline off at
+    # restore): drop it explicitly -- a stale device_put would feed the
+    # next finalize partial sums from a mesh that no longer exists
+    sections = tuple(sorted(example_tree))
+    state = ckpt.restore(step, example_tree,
+                         shardings=bundle.state_shardings(),
+                         sections=sections)
+    return state, True

@@ -112,12 +112,34 @@ def run_with_restarts(train_steps: int, step_fn: Callable[[int], Any],
                       checkpoint_every: int = 50,
                       max_restarts: int = 3,
                       monitor: Optional[StragglerMonitor] = None,
-                      heartbeat: Optional[HeartbeatMonitor] = None):
+                      heartbeat: Optional[HeartbeatMonitor] = None,
+                      flush_fn: Optional[Callable[[], None]] = None):
     """Checkpoint/restart driver. step_fn(step) runs one step (stateful
     via closure); restore_fn() reloads the last checkpoint and returns
-    the step to resume from."""
-    restarts = 0
+    the step to resume from.
+
+    ``flush_fn`` (optional) is called on a step failure BEFORE
+    restore_fn: a schedule that carries state across the step boundary
+    (the cross-step optimizer pipeline) drains its in-flight epilogue
+    there, so the last completed step's update is applied rather than
+    silently dropped -- load-bearing when restore_fn has no checkpoint
+    to fall back to and resumes from the live state. A flush_fn failure
+    (e.g. the carry's buffers were donated by the step that died) is
+    swallowed: the restore that follows re-establishes a consistent
+    state either way.
+
+    ``max_restarts`` bounds CONSECUTIVE failures, not lifetime failures:
+    the counter resets after a full checkpoint interval completes
+    cleanly (progress reached the next save without a failure), so a
+    long run with sparse transient faults does not accumulate toward
+    the limit. The returned ``restarts`` is still the lifetime total.
+    """
+    restarts = 0            # consecutive failures since the last clean
+    #                         checkpoint interval -- compared to
+    #                         max_restarts
+    total_restarts = 0      # lifetime count, reported in the result
     step = restore_fn()
+    safe_step = step        # last step persisted (or resumed from)
     while step < train_steps:
         try:
             t0 = time.monotonic()
@@ -130,10 +152,22 @@ def run_with_restarts(train_steps: int, step_fn: Callable[[int], Any],
             step += 1
             if step % checkpoint_every == 0 or step == train_steps:
                 save_fn(step)
+                if step - safe_step >= checkpoint_every:
+                    restarts = 0    # a full interval ran clean: forgive
+                    #                 earlier transient failures
+                safe_step = step
         except Exception:
             restarts += 1
+            total_restarts += 1
             if restarts > max_restarts:
                 raise
+            if flush_fn is not None:
+                try:
+                    flush_fn()
+                except Exception:
+                    pass
             step = restore_fn()
-    return {"final_step": step, "restarts": restarts,
+            safe_step = step
+    return {"final_step": step, "restarts": total_restarts,
+            "consecutive_restarts": restarts,
             "stragglers": monitor.summary() if monitor else {}}

@@ -1,0 +1,212 @@
+"""Checkpointer tests (its first dedicated coverage): manifest-v2
+schema, bf16/fp8 bitcast round-trip, async save / wait / GC interaction,
+validation failures with readable diffs (treedef, leaf paths, shapes,
+shardings alignment), section-filtered restore, v1 manifest
+back-compat, and meta round-trip."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (MANIFEST_VERSION, CheckpointError,
+                                           Checkpointer)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": [jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.float32),
+                   jnp.asarray(rng.normal(0, 1, (4,)), jnp.bfloat16)],
+        "opt": {"m": [jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.float32)],
+                "step": jnp.int32(7)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# manifest v2 schema + round-trips
+# ---------------------------------------------------------------------------
+
+def test_manifest_v2_schema(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _tree(), blocking=True, meta={"note": "hello"})
+    man = ck.manifest(3)
+    assert man["version"] == MANIFEST_VERSION
+    assert man["step"] == 3
+    assert man["meta"] == {"note": "hello"}
+    assert man["n_leaves"] == len(man["leaves"]) == 4
+    # leaves carry path/section/logical shape+dtype, in flatten order
+    # (dict keys sort: opt before params)
+    assert [l["section"] for l in man["leaves"]] == \
+        ["opt", "opt", "params", "params"]
+    assert man["leaves"][2]["path"] == "['params'][0]"
+    assert man["leaves"][2]["shape"] == [8, 4]
+    assert man["leaves"][3]["dtype"] == "bfloat16"
+
+
+def test_roundtrip_preserves_values(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(1, tree, blocking=True)
+    restored = ck.restore(1, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float8_e4m3fn",
+                                   "float8_e5m2"])
+def test_bitcast_dtypes_roundtrip_bit_exact(tmp_path, dtype):
+    """numpy cannot np.save ml_dtypes; the manifest records the logical
+    dtype and the bits are stored raw -- the round-trip must be
+    bit-exact, not merely close."""
+    ck = Checkpointer(str(tmp_path))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (16, 3)), jnp.float32).astype(dtype)
+    ck.save(1, {"w": x}, blocking=True)
+    man = ck.manifest(1)
+    assert man["leaves"][0]["dtype"] == dtype
+    assert man["leaves"][0]["shape"] == [16, 3]
+    r = ck.restore(1, {"w": x})["w"]
+    assert str(r.dtype) == dtype
+    width = np.uint16 if dtype == "bfloat16" else np.uint8
+    np.testing.assert_array_equal(np.asarray(x).view(width),
+                                  np.asarray(r).view(width))
+
+
+def test_async_save_wait_and_gc(tmp_path):
+    """Back-to-back async saves serialize (each waits out the previous
+    writer), wait() drains the last one, and GC keeps `keep` newest."""
+    ck = Checkpointer(str(tmp_path), keep=2)
+    trees = {s: _tree(seed=s) for s in (1, 2, 3, 4)}
+    for s, t in trees.items():
+        ck.save(s, t, blocking=False)
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+    # both survivors are complete and readable (atomic publish): the
+    # manifest parses and the values round-trip
+    for s in (3, 4):
+        assert ck.manifest(s)["version"] == MANIFEST_VERSION
+        r = ck.restore(s, trees[s])
+        for a, b in zip(jax.tree.leaves(trees[s]), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+    # no temp dirs left behind
+    assert not list(tmp_path.glob(".tmp_step_*"))
+
+
+# ---------------------------------------------------------------------------
+# validation failures (never silently truncate / mis-assign)
+# ---------------------------------------------------------------------------
+
+def test_restore_into_wrong_structure_raises_readable(tmp_path):
+    """The satellite bug: restoring into a structurally different tree
+    (e.g. carry present in the checkpoint but cross_step_pipeline off at
+    restore) used to silently mis-assign leaves by position."""
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    tree["carry"] = {"g_acc": [jnp.zeros((2, 8, 4))]}
+    ck.save(1, tree, blocking=True)
+    with pytest.raises(CheckpointError) as ei:
+        ck.restore(1, _tree())   # no carry in the example
+    msg = str(ei.value)
+    assert "['carry']['g_acc'][0]" in msg
+    assert "not in the example tree" in msg
+    # the reverse direction (example expects more than was saved)
+    ck.save(2, _tree(), blocking=True)
+    with pytest.raises(CheckpointError) as ei:
+        ck.restore(2, tree)
+    assert "absent from the checkpoint" in str(ei.value)
+
+
+def test_restore_treedef_mismatch_same_paths(tmp_path):
+    """Same leaf paths, different container type (tuple vs list) still
+    fails the treedef check rather than unflattening into the wrong
+    structure silently."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": [jnp.zeros(3), jnp.ones(3)]}, blocking=True)
+    with pytest.raises(CheckpointError, match="treedef"):
+        ck.restore(1, {"a": (jnp.zeros(3), jnp.ones(3))})
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((4, 4))}, blocking=True)
+    with pytest.raises(CheckpointError, match="shape mismatch"):
+        ck.restore(1, {"w": jnp.zeros((2, 4))})
+
+
+def test_short_shardings_tree_raises(tmp_path, mesh3):
+    """The satellite bug: zip() against a shorter shardings tree used to
+    silently truncate and leave trailing leaves on default placement."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ck = Checkpointer(str(tmp_path))
+    tree = {"params": [jnp.zeros((8, 4)), jnp.ones((8, 4))]}
+    ck.save(1, tree, blocking=True)
+    sh = NamedSharding(mesh3, P())
+    with pytest.raises(CheckpointError, match="shardings"):
+        ck.restore(1, tree, shardings={"params": [sh]})     # one short
+    ok = ck.restore(1, tree, shardings={"params": [sh, sh]})
+    assert all(x.sharding == sh for x in ok["params"])
+
+
+def test_section_filtered_restore(tmp_path):
+    """sections= selects top-level keys explicitly -- the mechanism the
+    elastic path uses to drop a mesh-shaped carry."""
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    tree["carry"] = {"g_acc": [jnp.full((2, 8, 4), 3.0)]}
+    ck.save(1, tree, blocking=True)
+    partial = ck.restore(1, _tree(), sections=("params", "opt"))
+    assert set(partial) == {"params", "opt"}
+    np.testing.assert_array_equal(np.asarray(partial["params"][0]),
+                                  np.asarray(tree["params"][0]))
+    # a wrong example for the selected sections still raises
+    with pytest.raises(CheckpointError, match="sections"):
+        ck.restore(1, {"params": _tree()["params"]},
+                   sections=("params", "opt"))
+
+
+def test_v1_manifest_back_compat(tmp_path):
+    """Checkpoints written before the versioned manifest (no version /
+    path / section fields) still restore; sections= on them raises
+    instead of guessing."""
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(1, tree, blocking=True)
+    # rewrite the manifest as v1 (what the old writer produced)
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    man = json.loads(mpath.read_text())
+    v1 = {"step": man["step"], "treedef": man["treedef"],
+          "n_leaves": man["n_leaves"],
+          "leaves": [{"shape": l["shape"], "dtype": l["dtype"]}
+                     for l in man["leaves"]]}
+    mpath.write_text(json.dumps(v1))
+    restored = ck.restore(1, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # v1 still refuses a leaf-count mismatch...
+    with pytest.raises(CheckpointError, match="refusing"):
+        ck.restore(1, {"params": tree["params"]})
+    # ...and a same-count shape mismatch (v1 manifests do record shapes)
+    wrong = jax.tree.map(lambda x: jnp.zeros((3, 3)), tree)
+    with pytest.raises(CheckpointError, match="shape mismatch"):
+        ck.restore(1, wrong)
+    # ...and cannot be section-filtered (no section records)
+    with pytest.raises(CheckpointError, match="manifest v2"):
+        ck.restore(1, tree, sections=("params",))
+
+
+def test_restore_accepts_shapedtypestruct_example(tmp_path):
+    """Example leaves may be ShapeDtypeStructs (the restart driver
+    builds the carry example from the bundle's sds tree)."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+    ck.save(1, tree, blocking=True)
+    ex = {"w": jax.ShapeDtypeStruct((2, 3), jnp.float32)}
+    out = ck.restore(1, ex)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))

@@ -1,0 +1,383 @@
+"""Checkpoint/restart + elastic tests (the restart loop's first
+coverage): the flush_fn hook ordering, restart-counter reset after a
+clean checkpoint interval, mid-pipeline checkpoint round-trip
+bit-exactness (the cross-step carry rides the checkpoint), elastic
+downscale with carry invalidation + re-prime, remesh device slicing,
+and FailureInjector crash/resume parity through the real launch driver
+on both the fused and piped schedules."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                ShapeCell, SystemConfig)
+from repro.core.engine import StepBundle
+from repro.launch.mesh import make_mesh
+from repro.optim.adamw import init_opt_state
+from repro.runtime.elastic import mesh_meta, remesh, reshard_state
+from repro.runtime.fault_tolerance import (FailureInjector,
+                                           run_with_restarts)
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=2, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+CELL = ShapeCell("t", "train", 64, 8)
+
+
+def make_bundle(mesh, **sys_kw):
+    sysd = dict(mode="fcdp", min_shard_size=8, async_grad_reduce=True,
+                cross_step_pipeline=True)
+    sysd.update(sys_kw)
+    run = RunConfig(model=DENSE, shape=CELL, system=SystemConfig(**sysd),
+                    optimizer=OptimizerConfig(total_steps=8, warmup_steps=2,
+                                              lr=1e-3),
+                    microbatch=2)
+    return StepBundle(run, mesh)
+
+
+def make_batches(n, vocab=256):
+    out = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        out.append({"ids": jnp.asarray(
+                        rng.integers(1, vocab, (CELL.global_batch,
+                                                CELL.seq_len)), jnp.int32),
+                    "labels": jnp.asarray(
+                        rng.integers(1, vocab, (CELL.global_batch,
+                                                CELL.seq_len)), jnp.int32),
+                    "mask": jnp.ones((CELL.global_batch, CELL.seq_len),
+                                     bool)})
+    return out
+
+
+def _init(bundle):
+    params = bundle.init_all_params(seed=0)
+    tp, fp = bundle.split(params)
+    opt = jax.jit(functools.partial(
+        init_opt_state, sys=bundle.run.system))(tp)
+    return tp, fp, opt
+
+
+class PipedRunner:
+    """Minimal stand-in for launch.train.RunState's prime/piped/flush
+    driving, operating on explicit batches."""
+
+    def __init__(self, bundle):
+        self.b = bundle
+        self.tp, self.fp, self.opt = _init(bundle)
+        self.prime = bundle.make_train_prime() if bundle.cross_step else None
+        self.step = bundle.make_train_step()
+        self.flush = bundle.make_train_flush() if bundle.cross_step else None
+        self.carry = None
+        self.losses = {}
+
+    def run(self, batches, start=0):
+        for i, batch in enumerate(batches):
+            if not self.b.cross_step:
+                self.tp, self.opt, m = self.step(self.tp, self.fp, self.opt,
+                                                 batch)
+            elif self.carry is None:
+                self.carry, m = self.prime(self.tp, self.fp, self.opt, batch)
+            else:
+                self.tp, self.opt, self.carry, m = self.step(
+                    self.tp, self.fp, self.opt, self.carry, batch)
+            self.losses[start + i] = float(m["loss"])
+        return self
+
+    def drain(self):
+        if self.carry is not None:
+            self.tp, self.opt, _ = self.flush(self.tp, self.opt, self.carry)
+            self.carry = None
+        return self
+
+    def state_tree(self):
+        t = {"params": self.tp, "opt": self.opt}
+        if self.carry is not None:
+            t["carry"] = self.carry
+        return t
+
+    def load(self, state):
+        self.tp, self.opt = state["params"], state["opt"]
+        self.carry = state.get("carry")
+
+    def params_np(self):
+        return [np.asarray(x, np.float32) for x in self.tp]
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts unit behavior
+# ---------------------------------------------------------------------------
+
+def test_flush_fn_runs_before_restore_on_failure():
+    events = []
+    inj = FailureInjector(fail_at_steps=(2,))
+
+    def step_fn(step):
+        inj.maybe_fail(step)
+        events.append(("step", step))
+
+    def save(step):
+        events.append(("save", step))
+
+    def restore():
+        events.append(("restore",))
+        return 0
+
+    def flush():
+        events.append(("flush",))
+
+    res = run_with_restarts(4, step_fn, save, restore, checkpoint_every=10,
+                            flush_fn=flush)
+    assert res["final_step"] == 4 and res["restarts"] == 1
+    i = events.index(("flush",))
+    assert events[i - 1] == ("step", 1)        # failure interrupted step 2
+    assert events[i + 1] == ("restore",)       # flush strictly precedes
+
+
+def test_flush_fn_failure_is_swallowed():
+    inj = FailureInjector(fail_at_steps=(1,))
+
+    def step_fn(step):
+        inj.maybe_fail(step)
+
+    def flush():
+        raise RuntimeError("carry buffers were donated")
+
+    res = run_with_restarts(3, step_fn, lambda s: None, lambda: 0,
+                            checkpoint_every=10, flush_fn=flush)
+    assert res["final_step"] == 3
+
+
+def test_restart_counter_resets_after_clean_interval():
+    """The satellite bug: a monotone lifetime counter kills a long run
+    with sparse transient failures. After a full clean checkpoint
+    interval the consecutive counter must reset."""
+    ckpt = {"step": 0}
+
+    def save(step):
+        ckpt["step"] = step
+
+    def restore():
+        return ckpt["step"]
+
+    # one transient failure per interval, 5 intervals: lifetime failures
+    # (5) exceed max_restarts (2) but never consecutively
+    inj = FailureInjector(fail_at_steps=(1, 11, 21, 31, 41))
+
+    def step_fn(step):
+        inj.maybe_fail(step)
+
+    res = run_with_restarts(50, step_fn, save, restore, checkpoint_every=5,
+                            max_restarts=2)
+    assert res["final_step"] == 50
+    assert res["restarts"] == 5                # lifetime total, reported
+    assert res["consecutive_restarts"] == 0
+
+    # genuinely consecutive failures still trip the limit
+    class AlwaysFail(Exception):
+        pass
+
+    def bad_step(step):
+        raise AlwaysFail()
+
+    with pytest.raises(AlwaysFail):
+        run_with_restarts(10, bad_step, lambda s: None, lambda: 0,
+                          checkpoint_every=5, max_restarts=2)
+
+
+# ---------------------------------------------------------------------------
+# mid-pipeline checkpoint round-trip (same mesh) -- the tentpole
+# ---------------------------------------------------------------------------
+
+def test_mid_pipeline_checkpoint_roundtrip_bit_exact(tmp_path, mesh3):
+    """A checkpoint taken mid-pipeline (carry section riding the
+    manifest) restored into a FRESH bundle resumes the piped schedule
+    with final losses and params bit-identical to an uninterrupted run
+    -- the acceptance criterion's same-mesh leg."""
+    batches = make_batches(6)
+    ref = PipedRunner(make_bundle(mesh3)).run(batches).drain()
+
+    a = PipedRunner(make_bundle(mesh3)).run(batches[:4])
+    assert a.carry is not None                     # mid-pipeline
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, a.state_tree(), blocking=True, meta=mesh_meta(mesh3))
+    man = ck.manifest(4)
+    assert any(l["section"] == "carry" for l in man["leaves"])
+    assert man["meta"]["mesh"] == {"shape": [2, 2, 2],
+                                   "axes": ["pod", "data", "model"]}
+
+    # "new process": fresh bundle + fresh state, restore, continue
+    b2 = make_bundle(mesh3)
+    r = PipedRunner(b2)
+    state, invalidated = reshard_state(
+        ck, 4, b2, {"params": r.tp, "opt": r.opt})
+    assert not invalidated and state.get("carry") is not None
+    r.load(state)
+    r.run(batches[4:], start=4).drain()
+    assert {k: r.losses[k] for k in (4, 5)} == \
+        {k: ref.losses[k] for k in (4, 5)}
+    for x, y in zip(ref.params_np(), r.params_np()):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_crash_between_checkpoints_replays_bit_exact(tmp_path, mesh3):
+    """Crash at a step past the last checkpoint: restore + replay of the
+    intervening steps lands bit-identically on the uninterrupted
+    trajectory (deterministic data keyed by step)."""
+    batches = make_batches(6)
+    ref = PipedRunner(make_bundle(mesh3)).run(batches).drain()
+
+    a = PipedRunner(make_bundle(mesh3)).run(batches[:3])
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, a.state_tree(), blocking=True, meta=mesh_meta(mesh3))
+    a.run(batches[3:5], start=3)      # steps 3,4 run, then the crash
+
+    b2 = make_bundle(mesh3)
+    r = PipedRunner(b2)
+    state, invalidated = reshard_state(ck, 3, b2,
+                                       {"params": r.tp, "opt": r.opt})
+    assert not invalidated
+    r.load(state)
+    r.run(batches[3:], start=3).drain()
+    assert r.losses[5] == ref.losses[5]
+    for x, y in zip(ref.params_np(), r.params_np()):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# elastic: carry invalidation on mesh change + re-prime
+# ---------------------------------------------------------------------------
+
+def test_elastic_downscale_invalidates_carry_and_reprimes(tmp_path, mesh3):
+    """Pod-internal downscale (2,2,2) -> (2,1,2): the carry's leading
+    partial dims are mesh-shaped, so the restore must invalidate it and
+    the driver re-runs the last step to re-prime -- never device_put
+    stale partials. Restored params/opt are bit-identical to the saved
+    ones; the resumed trajectory tracks the uninterrupted run (reduction
+    order shifts across meshes, so allclose rather than bit-equal)."""
+    batches = make_batches(6)
+    ref = PipedRunner(make_bundle(mesh3)).run(batches).drain()
+
+    a = PipedRunner(make_bundle(mesh3)).run(batches[:4])
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, a.state_tree(), blocking=True, meta=mesh_meta(mesh3))
+
+    small = make_mesh((2, 1, 2), ("pod", "data", "model"),
+                      devices=jax.devices()[:4])
+    b2 = make_bundle(small)
+    assert b2.cross_step                     # pipeline still live
+    r = PipedRunner(b2)
+    state, invalidated = reshard_state(ck, 4, b2,
+                                       {"params": r.tp, "opt": r.opt})
+    assert invalidated and "carry" not in state
+    r.load(state)
+    # restored params/opt are the saved global arrays, bit-exact
+    for x, y in zip(a.params_np(), r.params_np()):
+        np.testing.assert_array_equal(x, y)
+    # the driver contract: resume at saved_step - 1 -> step 3 re-primes
+    # (rebuilding the carry the mesh change destroyed), 4..5 pipe
+    r.run(batches[3:], start=3).drain()
+    assert r.carry is None
+    np.testing.assert_allclose(
+        [r.losses[k] for k in (4, 5)],
+        [ref.losses[k] for k in (4, 5)], rtol=3e-4)
+    # params are bf16: cross-mesh drift lands on neighbouring ulps
+    # (one ulp is ~0.8% relative), so the bound is quantization-aware
+    for x, y in zip(ref.params_np(), r.params_np()):
+        np.testing.assert_allclose(x, y, rtol=2e-2, atol=3e-4)
+
+
+def test_restore_with_pipeline_off_drops_carry(tmp_path, mesh3):
+    """cross_step_pipeline off at restore: the checkpoint's carry
+    section must be dropped explicitly (and the driver re-runs the last
+    step under the fused schedule) instead of mis-assigning leaves."""
+    batches = make_batches(5)
+    a = PipedRunner(make_bundle(mesh3)).run(batches[:4])
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, a.state_tree(), blocking=True, meta=mesh_meta(mesh3))
+
+    b2 = make_bundle(mesh3, cross_step_pipeline=False,
+                     async_grad_reduce=True)
+    assert not b2.cross_step
+    r = PipedRunner(b2)
+    state, invalidated = reshard_state(ck, 4, b2,
+                                       {"params": r.tp, "opt": r.opt})
+    assert invalidated and "carry" not in state
+    r.load(state)
+    # re-run step 3 fused: its update (held only by the dropped carry)
+    # is re-derived, then step 4 continues -- nothing silently lost
+    r.run(batches[3:], start=3)
+    ref = PipedRunner(make_bundle(mesh3)).run(batches).drain()
+    for x, y in zip(ref.params_np(), r.params_np()):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_no_pod_downscale_also_invalidates(tmp_path, mesh3, mesh2):
+    """Downscale that loses the pod axis entirely: the pipeline cannot
+    run at all on the new mesh -- carry dropped, fused resume."""
+    batches = make_batches(4)
+    a = PipedRunner(make_bundle(mesh3)).run(batches[:3])
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, a.state_tree(), blocking=True, meta=mesh_meta(mesh3))
+    b2 = make_bundle(mesh2)
+    assert not b2.cross_step
+    r = PipedRunner(b2)
+    state, invalidated = reshard_state(ck, 3, b2,
+                                       {"params": r.tp, "opt": r.opt})
+    assert invalidated and "carry" not in state
+    r.load(state)
+    r.run(batches[2:], start=2)
+    assert all(np.isfinite(v) for v in r.losses.values())
+
+
+def test_remesh_uses_only_surviving_devices():
+    """The satellite bug: remesh computed the used-device count and then
+    dropped it, so make_mesh saw every visible device even when the
+    surviving shape covers fewer."""
+    m = remesh(4, tp=2)
+    assert m.axis_names == ("data", "model")
+    assert dict(m.shape) == {"data": 2, "model": 2}
+    assert m.devices.size == 4
+    assert list(m.devices.flat) == jax.devices()[:4]
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector crash/resume parity through the real launch driver
+# ---------------------------------------------------------------------------
+
+def _drive(tmp_path, tag, steps, extra):
+    from repro.launch.train import main
+    argv = ["--arch", "gemma-2b", "--smoke", "--multi-pod",
+            "--steps", str(steps), "--batch", "8", "--seq-len", "64",
+            "--lr", "1e-3", "--ckpt-dir", str(tmp_path / tag),
+            "--ckpt-every", "3"] + extra
+    st = main(argv)
+    per_step = {}
+    for row in st.metrics_log:          # last occurrence wins (replays)
+        if "step" in row:
+            per_step[row["step"]] = row["loss"]
+    return per_step, [np.asarray(x, np.float32) for x in st.train_p]
+
+
+@pytest.mark.parametrize("schedule,flags", [
+    ("fused", ["--microbatch", "2"]),
+    ("piped", ["--microbatch", "2", "--async-grad-reduce",
+               "--cross-step-pipeline"]),
+])
+def test_driver_crash_resume_parity(tmp_path, schedule, flags):
+    """The acceptance criterion end-to-end: a run killed at an arbitrary
+    (piped) step by the FailureInjector and restarted from the last
+    checkpoint produces bit-identical per-step losses and final params
+    to an uninterrupted run -- on the fused AND the cross-step
+    schedules. Step 5 sits past the step-3 checkpoint, so the restart
+    replays steps 3..4 before continuing."""
+    clean_losses, clean_params = _drive(tmp_path, f"{schedule}-clean", 7,
+                                        flags)
+    crash_losses, crash_params = _drive(tmp_path, f"{schedule}-crash", 7,
+                                        flags + ["--fail-at", "5"])
+    assert crash_losses == clean_losses
+    for x, y in zip(clean_params, crash_params):
+        np.testing.assert_array_equal(x, y)
