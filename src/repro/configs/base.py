@@ -199,6 +199,14 @@ class SystemConfig:
     activation_policy: str = "save_all"
     # beyond-paper: int8 block-quantized gradient stage over the pod axis
     grad_compress: str = "none"        # none | int8_pod
+    # beyond-paper (ZeRO++ qwZ): int8 block-quantized stage-1 (pod-axis)
+    # parameter all-gather -- blocks + fp32 scales on the wire,
+    # dequantized on arrival so the FCDP host cache stays bf16 and the
+    # backward reuse is free and full-precision
+    param_compress: str = "none"       # none | int8_pod
+    # implementation of the quantize/dequantize hot loops shared by
+    # grad_compress / param_compress / act_psum
+    quant_impl: str = "jnp"            # jnp | pallas | pallas_interpret
     # chunked cross-entropy (beyond-paper memory optimization)
     loss_chunk: int = 0                # 0 -> unchunked
     # param/compute dtypes
@@ -261,6 +269,15 @@ class SystemConfig:
             raise ValueError(
                 f"prefetch_depth must be a non-negative int, got {depth!r}")
         object.__setattr__(self, "prefetch_depth", depth)
+        for knob in ("grad_compress", "param_compress"):
+            if getattr(self, knob) not in ("none", "int8_pod"):
+                raise ValueError(
+                    f"unknown {knob} {getattr(self, knob)!r}; "
+                    "known: none, int8_pod")
+        if self.quant_impl not in ("jnp", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"unknown quant_impl {self.quant_impl!r}; "
+                "known: jnp, pallas, pallas_interpret")
         if self.cross_step_pipeline and not self.async_grad_reduce:
             raise ValueError(
                 "cross_step_pipeline=True requires async_grad_reduce=True: "

@@ -18,6 +18,7 @@ separate would-be-host bytes from true device temps.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -29,9 +30,67 @@ from repro.core.schedule import (GatherScheduler,
                                  cross_step_buffer_bytes_by_group,
                                  cross_step_enabled,
                                  prefetch_buffer_bytes_by_group)
-from repro.core.strategy import GatherPlan, get_strategy, leaf_group
+from repro.core.strategy import (QUANT_MIN_SHARD_ELEMS, GatherPlan,
+                                 get_strategy, leaf_group)
 
 HBM_PER_CHIP = 16 * 2**30          # v5e
+
+QUANT_BLOCK = QUANT_MIN_SHARD_ELEMS   # == kernels/quant.py BLOCK
+_BF16_BYTES = 2.0
+# int8 wire cost per padded quant block: BLOCK int8 payload + one f32 scale
+_INT8_BLOCK_BYTES = float(QUANT_BLOCK + 4)
+
+
+def _stage1_leaf_wire_bytes(pdef, plan: GatherPlan, mi) -> float:
+    """Per-chip DCN wire bytes for one forward stage-1 all-gather of this
+    leaf: ring all-gather moves (n-1)/n of the gathered payload per chip.
+
+    compress_fwd leaves ship int8 blocks + f32 scales (qwZ): block count
+    follows the per-scan-slice quantization the sequential schedule
+    performs (the async leaf-level path quantizes the whole stacked leaf
+    at once -- at the >=1-block shard sizes the gate admits, the same
+    bytes up to per-slice padding)."""
+    n = 1
+    for a in plan.inter_axes:
+        n *= mi.size(a)
+    if n <= 1:
+        return 0.0
+    degree = n
+    for a in plan.intra_axes:
+        degree *= mi.size(a)
+    if "tp" in pdef.dims:      # leaf is additionally model-sharded
+        degree *= mi.tp
+    shard_elems = pdef.size() // degree
+    if plan.compress_fwd:
+        stack = (pdef.shape[pdef.dims.index("stack")]
+                 if "stack" in pdef.dims else 1)
+        slice_elems = shard_elems // stack
+        blocks = stack * (-(-slice_elems // QUANT_BLOCK))
+        shard_bytes = blocks * _INT8_BLOCK_BYTES
+    else:
+        shard_bytes = shard_elems * _BF16_BYTES
+    return (n - 1) / n * n * shard_bytes
+
+
+def stage1_dcn_gather_bytes(bundle) -> Dict[str, float]:
+    """Analytic per-chip stage-1 (pod-axis) all-gather wire bytes for ONE
+    forward pass, honoring qwZ (``SystemConfig.param_compress``): the
+    quantized-vs-exact split the roofline's jaxpr walk measures, derived
+    from the plan tree alone so the planner/dryrun can report the DCN
+    reduction without tracing. ``exact`` is the bf16 counterfactual."""
+    by_group: Dict[str, float] = {}
+    exact = 0.0
+    for d, p in zip(bundle.def_leaves, bundle.plan_leaves):
+        if not isinstance(p, GatherPlan) or not p.inter_axes:
+            continue
+        g = leaf_group(bundle.strategy, d)
+        by_group[g] = by_group.get(g, 0.0) + _stage1_leaf_wire_bytes(
+            d, p, bundle.mi)
+        exact += _stage1_leaf_wire_bytes(
+            d, dataclasses.replace(p, compress_fwd=False), bundle.mi)
+    return {"stage1_dcn_gather_bytes_per_chip": sum(by_group.values()),
+            "stage1_dcn_gather_bytes_exact": exact,
+            "by_group": by_group}
 
 
 def cache_bytes_per_chip(bundle) -> Dict[str, float]:
@@ -75,7 +134,8 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
                 "n_leaves": 0,
                 "prefetch_buffer_bytes_per_chip": 0.0,
                 "async_buffer_bytes_per_chip": 0.0,
-                "cross_step_buffer_bytes_per_chip": 0.0})
+                "cross_step_buffer_bytes_per_chip": 0.0,
+                "stage1_dcn_gather_bytes_per_chip": 0.0})
         gb["cached_bytes_per_chip"] += strategy.cached_bytes_for(d, p, mi)
         gb["n_leaves"] += 1
     # the depth the scheduler actually resolves for this bundle (0 when
@@ -94,9 +154,18 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
         for g, b in cross_step_buffer_bytes_by_group(
                 strategy, defs, plans, mi).items():
             by_group[g]["cross_step_buffer_bytes_per_chip"] = b
+    dcn = stage1_dcn_gather_bytes(bundle)
+    for g, b in dcn["by_group"].items():
+        if g in by_group:
+            by_group[g]["stage1_dcn_gather_bytes_per_chip"] = b
     host = sum(gb["cached_bytes_per_chip"] for gb in by_group.values()
                if gb["placement"] == "host")
     return {"host_cache_bytes_per_chip": host,
+            "param_compress": bundle.run.system.param_compress,
+            "stage1_dcn_gather_bytes_per_chip": dcn[
+                "stage1_dcn_gather_bytes_per_chip"],
+            "stage1_dcn_gather_bytes_exact": dcn[
+                "stage1_dcn_gather_bytes_exact"],
             "cached_bytes_per_chip": sum(
                 gb["cached_bytes_per_chip"] for gb in by_group.values()),
             "prefetch_depth": depth,
@@ -165,6 +234,9 @@ class MemoryPlanner:
                   "cross_step_buffer_bytes_per_chip"],
               "peak_bytes": peak, "host_bytes": acct[
                   "host_cache_bytes_per_chip"],
+              "param_compress": acct["param_compress"],
+              "stage1_dcn_gather_bytes": acct[
+                  "stage1_dcn_gather_bytes_per_chip"],
               "by_group": acct["by_group"]}
         iters.append(it)
         return it

@@ -51,7 +51,9 @@ class StepBundle:
             self.model.strategy = strategy
             self.model._plans = strategy.plan_tree(
                 defs, mesh, sys.min_shard_size,
-                compress_bwd=(sys.grad_compress == "int8_pod"))
+                compress_bwd=(sys.grad_compress == "int8_pod"),
+                param_compress=(sys.param_compress == "int8_pod"),
+                quant_impl=sys.quant_impl)
         self.strategy = self.model.strategy
         self.defs = self.model.defs
         self.def_leaves, self.treedef = jax.tree.flatten(

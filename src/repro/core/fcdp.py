@@ -70,17 +70,20 @@ def cache_name(plan: GatherPlan) -> str:
 
 def make_gather_plan(pdef: ParamDef, mesh, mode,
                      min_shard_size: int = 0,
-                     compress_bwd: bool = False) -> GatherPlan:
+                     compress_bwd: bool = False,
+                     param_compress: bool = False,
+                     quant_impl: str = "jnp") -> GatherPlan:
     """Derive the gather plan matching ``storage_spec`` for this param.
     ``mode`` is a strategy name or ShardingStrategy object."""
     return resolve_strategy(mode).gather_plan(
-        pdef, mesh, min_shard_size, compress_bwd)
+        pdef, mesh, min_shard_size, compress_bwd, param_compress, quant_impl)
 
 
 def plan_tree(defs, mesh, mode, min_shard_size: int = 0,
-              compress_bwd: bool = False):
+              compress_bwd: bool = False, param_compress: bool = False,
+              quant_impl: str = "jnp"):
     return resolve_strategy(mode).plan_tree(
-        defs, mesh, min_shard_size, compress_bwd)
+        defs, mesh, min_shard_size, compress_bwd, param_compress, quant_impl)
 
 
 def _ag_fn(plan: GatherPlan):
@@ -110,9 +113,17 @@ def gather_stage1(w: jax.Array, plan: GatherPlan) -> jax.Array:
     FCDP-Comm frozen layout). Must run inside shard_map."""
     if not plan.is_gathered or not plan.inter_axes:
         return w
+    if plan.compress_fwd and len(plan.inter_axes) == 1 and not plan.frozen:
+        # qwZ: int8 blocks + fp32 scales on the DCN wire, dequantized on
+        # arrival -- what lands in the (host) cache is the dequantized
+        # bf16 stage-1 view, so backward reuse stays free/full-precision
+        from repro.core.grad_compress import quantized_stage1_gather
+        return quantized_stage1_gather(w, plan.inter_axes[0], plan.fsdp_dim,
+                                       plan.compress_bwd, plan.quant_impl)
     if plan.compress_bwd and len(plan.inter_axes) == 1 and not plan.frozen:
         from repro.core.grad_compress import compressed_stage1_gather
-        return compressed_stage1_gather(w, plan.inter_axes[0], plan.fsdp_dim)
+        return compressed_stage1_gather(w, plan.inter_axes[0], plan.fsdp_dim,
+                                        plan.quant_impl)
     return _ag_fn(plan)(w, plan.inter_axes, plan.fsdp_dim)
 
 

@@ -272,18 +272,34 @@ def stage1_resident_plans(plans):
 
 def leaf_stage1(w: jax.Array, pdef, plan: GatherPlan) -> jax.Array:
     """Stage-1 (inter/DCN) gather of a whole (possibly stacked) storage
-    leaf. Identity when the plan has no inter axes."""
+    leaf. Identity when the plan has no inter axes. Under
+    param_compress='int8_pod' the leaf transports int8 blocks + fp32
+    scales (quantized at leaf level, so block boundaries differ from the
+    sequential schedule's per-layer-slice blocks -- see
+    ARCHITECTURE.md §Quantized collectives)."""
     if not (plan.is_gathered and plan.inter_axes):
         return w
+    if plan.compress_fwd and len(plan.inter_axes) == 1 and not plan.frozen:
+        from repro.core.grad_compress import quantized_stage1_gather
+        # not differentiated here (the async schedule differentiates
+        # w.r.t. the gathered view); the exact-bwd variant is fine
+        return quantized_stage1_gather(w, plan.inter_axes[0], pdef.fsdp_dim,
+                                       False, plan.quant_impl)
     return _ag_fn(plan)(w, plan.inter_axes, pdef.fsdp_dim)
 
 
 def leaf_stage1_reduce(gbar: jax.Array, pdef, plan: GatherPlan) -> jax.Array:
     """Transpose of :func:`leaf_stage1`: pod-axis reduce-scatter of a
     stage-1-level gradient down to the storage shard. This is the
-    collective the async stream takes off the critical path."""
+    collective the async stream takes off the critical path. Under
+    grad_compress='int8_pod' it transports int8 (same per-microbatch
+    quantization the sequential schedule's custom vjp applies)."""
     if not (plan.is_gathered and plan.inter_axes):
         return gbar
+    if plan.compress_bwd and len(plan.inter_axes) == 1:
+        from repro.core.grad_compress import int8_psum_scatter
+        return int8_psum_scatter(gbar, plan.inter_axes[0], pdef.fsdp_dim,
+                                 plan.quant_impl)
     return jax.lax.psum_scatter(gbar, plan.inter_axes,
                                 scatter_dimension=pdef.fsdp_dim, tiled=True)
 
@@ -295,11 +311,14 @@ def leaf_stage1_reduce(gbar: jax.Array, pdef, plan: GatherPlan) -> jax.Array:
 def async_reduce_enabled(run, strategy, mi) -> bool:
     """Whether engine/train.py actually runs the async grad-reduce
     stream for this run: the flag must be on, the strategy willing, a
-    pod axis present, gradient accumulation active, and no int8
-    gradient compression (whose custom stage-1 vjp owns the reduce)."""
+    pod axis present, and gradient accumulation active.
+
+    int8 gradient compression COMPOSES with the stream: the deferred
+    pod reduce (leaf_stage1_reduce) runs the same per-microbatch int8
+    reduce-scatter the sequential schedule's custom stage-1 vjp applies
+    -- it used to silently disable stream 2."""
     sys = run.system
     return (bool(run.microbatch and run.microbatch > 1)
-            and sys.grad_compress == "none"
             and strategy.async_grad_reduce_active(sys, mi))
 
 

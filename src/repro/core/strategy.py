@@ -55,6 +55,14 @@ from repro.launch.mesh import fsdp_axes, intra_fsdp_axes
 
 INTER_AXIS = "pod"     # the slow (DCN) mesh axis name
 
+# Minimum per-slice shard elements for the int8 DCN transports (qwZ/qgZ).
+# Below one quant block the padding + fp32 scales cost MORE wire bytes
+# than bf16 (a (32,)-norm shard of 8 elems would ship a padded 256-block
+# plus scale: 260 B vs 16 B exact) -- such leaves keep the exact path.
+# Mirrors kernels/quant.py BLOCK; kept literal so core/ stays importable
+# without the kernels package.
+QUANT_MIN_SHARD_ELEMS = 256
+
 
 def spec_axes(spec: P) -> set:
     """Set of mesh axis names a PartitionSpec shards over."""
@@ -78,6 +86,11 @@ class GatherPlan:
     cache_after: int                 # 1 or 2: where the cache boundary sits
     frozen: bool = False
     compress_bwd: bool = False       # int8 DCN gradient reduce (beyond-paper)
+    # qwZ: stage-1 all-gather transports int8 blocks + fp32 scales and
+    # dequantizes on arrival (beyond-paper, ZeRO++); quant_impl selects
+    # the quantize/dequantize codepath (jnp | pallas | pallas_interpret)
+    compress_fwd: bool = False
+    quant_impl: str = "jnp"
     # where the backward reads the cached stage from, carried PER PLAN so
     # leaves of different strategy groups can coexist inside one
     # checkpointed layer body (core/fcdp.py keys the remat policy on a
@@ -126,6 +139,11 @@ class ShardingStrategy:
     # (CompositeStrategy intersects per group: any streaming group
     # enables the carry, and the whole epilogue is deferred).
     supports_cross_step: bool = True
+    # whether the stage-1 (pod-axis) parameter all-gather may transport
+    # int8 under SystemConfig.param_compress='int8_pod' (qwZ). Strategies
+    # with no stage 1 (MiCS/hier) decline structurally; a group can also
+    # decline explicitly under per-tensor mixed sharding.
+    supports_quantized_gather: bool = True
 
     @property
     def supports_prefetch(self) -> bool:
@@ -190,7 +208,9 @@ class ShardingStrategy:
 
     # -- gather schedule ----------------------------------------------------
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
-                    compress_bwd: bool = False) -> GatherPlan:
+                    compress_bwd: bool = False,
+                    param_compress: bool = False,
+                    quant_impl: str = "jnp") -> GatherPlan:
         """Derive the two-stage gather plan matching ``storage_spec``.
 
         If the def carries a 'stack' (scan) dimension, the returned fsdp
@@ -213,16 +233,30 @@ class ShardingStrategy:
         cache_after = 1 if inter else 2
         body_dim = d - 1 if ("stack" in pdef.dims and
                              pdef.dims.index("stack") < d) else d
+        # frozen params keep the exact invariant gather (their stage-1
+        # runs once into the cached layout, not per step -- nothing to
+        # compress) and strategies may decline qwZ entirely; leaves whose
+        # per-slice shard is smaller than one quant block also stay exact
+        # (the padded block + scale would cost more wire than bf16)
+        stack = (pdef.shape[pdef.dims.index("stack")]
+                 if "stack" in pdef.dims else 1)
+        quantizable = (bool(inter) and not pdef.frozen
+                       and pdef.size() // (degree * stack)
+                       >= QUANT_MIN_SHARD_ELEMS)
         return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
-                          compress_bwd=(compress_bwd and bool(inter)
-                                        and not pdef.frozen),
+                          compress_bwd=(compress_bwd and quantizable),
+                          compress_fwd=(param_compress and quantizable
+                                        and self.supports_quantized_gather),
+                          quant_impl=quant_impl,
                           placement=self.cache_placement)
 
     def plan_tree(self, defs, mesh, min_shard_size: int = 0,
-                  compress_bwd: bool = False):
+                  compress_bwd: bool = False, param_compress: bool = False,
+                  quant_impl: str = "jnp"):
         from repro.core.partition import tree_map_defs
         return tree_map_defs(
-            lambda p: self.gather_plan(p, mesh, min_shard_size, compress_bwd),
+            lambda p: self.gather_plan(p, mesh, min_shard_size, compress_bwd,
+                                       param_compress, quant_impl),
             defs)
 
     # -- FCDP-Cache ----------------------------------------------------------
@@ -341,6 +375,7 @@ class MiCS(ShardingStrategy):
     max_prefetch_depth = 0            # stage 1 structurally empty
     supports_async_grad_reduce = False
     supports_cross_step = False       # no stage-1 reduce to carry
+    supports_quantized_gather = False  # no stage-1 gather to quantize
 
     def storage_fsdp_axes(self, mesh, frozen: bool) -> Tuple[str, ...]:
         return intra_fsdp_axes(mesh)
@@ -438,9 +473,15 @@ class CompositeStrategy(ShardingStrategy):
         return self._for(pdef).opt_spec(pdef, mesh, min_shard_size)
 
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
-                    compress_bwd: bool = False) -> GatherPlan:
+                    compress_bwd: bool = False,
+                    param_compress: bool = False,
+                    quant_impl: str = "jnp") -> GatherPlan:
+        # per-leaf dispatch also gates qwZ per group: the leaf strategy's
+        # own supports_quantized_gather decides, so a declining group
+        # keeps its exact bf16 stage-1 gather inside a quantized bundle
         return self._for(pdef).gather_plan(pdef, mesh, min_shard_size,
-                                           compress_bwd)
+                                           compress_bwd, param_compress,
+                                           quant_impl)
 
     def cached_bytes_for(self, pdef, plan: GatherPlan, mi) -> float:
         return self._for(pdef).cached_bytes_for(pdef, plan, mi)
@@ -472,6 +513,12 @@ class CompositeStrategy(ShardingStrategy):
         # epilogue then covers EVERY group's once-per-step collectives
         # (incl. a hier group's widened reduce-scatter/all-gather pair)
         return any(s.supports_cross_step for s in self.groups.values())
+
+    @property
+    def supports_quantized_gather(self) -> bool:
+        # whole-model view only; the per-leaf gate is the leaf group's
+        # own attribute (see gather_plan above)
+        return any(s.supports_quantized_gather for s in self.groups.values())
 
     # device_cache_groups: inherited -- the base guard reads the
     # supports_device_cache property overridden above

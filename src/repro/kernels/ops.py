@@ -42,6 +42,37 @@ def wkv6(r, k, v, logw, u, chunk: int = 64, interpret: bool = False,
     return wkv6_chunked(r, k, v, logw, u, chunk=chunk, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def int8_quantize_blocks(x, interpret: bool = False, impl: str = "pallas"):
+    """Symmetric per-block int8 quantize. x: [nb, BLOCK] float.
+    Returns (q int8 [nb, BLOCK], scale f32 [nb, 1])."""
+    if impl == "jnp":
+        return kref.int8_quantize_blocks_ref(x)
+    from repro.kernels.quant import quantize_blocks
+    return quantize_blocks(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def int8_dequantize_blocks(q, s, interpret: bool = False,
+                           impl: str = "pallas"):
+    """(q int8 [nb, BLOCK], s f32 [nb, 1]) -> f32 [nb, BLOCK]."""
+    if impl == "jnp":
+        return kref.int8_dequantize_blocks_ref(q, s)
+    from repro.kernels.quant import dequantize_blocks
+    return dequantize_blocks(q, s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def int8_dequant_accumulate(q, s, interpret: bool = False,
+                            impl: str = "pallas"):
+    """Reduce-scatter inner loop: sequential dequant-accumulate of the
+    n source chunks. q: [n, nb, BLOCK] int8, s: [n, nb, 1] f32."""
+    if impl == "jnp":
+        return kref.int8_dequant_acc_ref(q, s)
+    from repro.kernels.quant import dequant_accumulate
+    return dequant_accumulate(q, s, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "channel_block",
                                              "interpret", "impl"))
 def ssm_scan(a, b, chunk: int = 128, channel_block: int = 512,

@@ -1,0 +1,125 @@
+"""Symmetric per-256-block int8 quantization kernels (Pallas, TPU target).
+
+Every int8 transport path in the repo -- the qwZ stage-1 weight gather,
+the qgZ gradient reduce-scatter, and the TP activation all-reduce --
+shares this one block layout: tensors are flattened, padded to a whole
+number of 256-element blocks, and each block carries one fp32 scale
+(max(|x|)/127, clamped to SCALE_EPS). The three kernels here are the hot
+loops of those paths:
+
+  quantize_blocks     [nb, BLOCK] f32 -> (int8 [nb, BLOCK], f32 [nb, 1])
+  dequantize_blocks   (q, s) -> f32 [nb, BLOCK]
+  dequant_accumulate  (q [n, nb, BLOCK], s [n, nb, 1]) -> f32 [nb, BLOCK]
+                      (the reduce-scatter inner loop: sequential fold of
+                      n dequantized source chunks, in grid order)
+
+Layout: BLOCK=256 spans two 128-wide VPU lanes; the block index maps
+onto sublanes in ROW_BLOCK-row tiles. Wrappers pad the row count so the
+kernels only ever see full tiles (padded rows quantize to q=0 and are
+sliced off). The jnp oracles live in kernels/ref.py; tests assert the
+interpret-mode kernels are bit-exact against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK = 256        # quantization block: elements sharing one fp32 scale
+SCALE_EPS = 1e-12  # scale clamp: keeps all-zero blocks finite
+ROW_BLOCK = 8      # sublane tile: block-rows processed per grid program
+# scale = max(|x|) * (1/127): a plain f32 divide by the constant 127 is
+# strength-reduced to a reciprocal multiply in SOME fusion contexts and
+# kept exact in others, so kernel and oracle could disagree by 1 ulp --
+# both multiply by this shared precomputed reciprocal instead (a python
+# float so Pallas kernels can close over it as a scalar literal)
+INV_QMAX = float(np.float32(1.0) / np.float32(127.0))
+
+
+def _pad_rows(x, rows_to: int):
+    pad = rows_to - x.shape[-2]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)]
+    return jnp.pad(x, widths)
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                       # [bm, BLOCK]
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) * INV_QMAX,
+                    SCALE_EPS)
+    q_ref[...] = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    s_ref[...] = s
+
+
+def quantize_blocks(x, *, interpret: bool = False):
+    """x: [nb, BLOCK] float -> (q int8 [nb, BLOCK], scale f32 [nb, 1])."""
+    nb, blk = x.shape
+    assert blk == BLOCK, (blk, BLOCK)
+    nbp = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    q, s = pl.pallas_call(
+        _quantize_kernel,
+        grid=(nbp // ROW_BLOCK,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROW_BLOCK, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((ROW_BLOCK, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nbp, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((nbp, 1), jnp.float32)],
+        interpret=interpret,
+    )(_pad_rows(x, nbp))
+    return q[:nb], s[:nb]
+
+
+def _dequantize_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def dequantize_blocks(q, s, *, interpret: bool = False):
+    """(q int8 [nb, BLOCK], s f32 [nb, 1]) -> f32 [nb, BLOCK]."""
+    nb, blk = q.shape
+    assert blk == BLOCK and s.shape == (nb, 1), (q.shape, s.shape)
+    nbp = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(nbp // ROW_BLOCK,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((ROW_BLOCK, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(_pad_rows(q, nbp), _pad_rows(s, nbp))
+    return out[:nb]
+
+
+def _dequant_acc_kernel(q_ref, s_ref, o_ref):
+    # grid: (row_tiles, n) with n innermost -- TPU grids iterate the last
+    # dimension sequentially, so the output tile (whose index_map ignores
+    # the source index) accumulates the n source chunks in order
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += q_ref[0].astype(jnp.float32) * s_ref[0]
+
+
+def dequant_accumulate(q, s, *, interpret: bool = False):
+    """(q int8 [n, nb, BLOCK], s f32 [n, nb, 1]) -> f32 [nb, BLOCK].
+
+    The reduce-scatter inner loop: dequantize each source rank's chunk
+    and fold it into the f32 accumulator, sequentially over sources."""
+    n, nb, blk = q.shape
+    assert blk == BLOCK and s.shape == (n, nb, 1), (q.shape, s.shape)
+    nbp = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    out = pl.pallas_call(
+        _dequant_acc_kernel,
+        grid=(nbp // ROW_BLOCK, n),
+        in_specs=[pl.BlockSpec((1, ROW_BLOCK, BLOCK),
+                               lambda ri, ni: (ni, ri, 0)),
+                  pl.BlockSpec((1, ROW_BLOCK, 1),
+                               lambda ri, ni: (ni, ri, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, BLOCK), lambda ri, ni: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(_pad_rows(q, nbp), _pad_rows(s, nbp))
+    return out[:nb]

@@ -8,6 +8,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import BLOCK, INV_QMAX, SCALE_EPS
+
 
 def attention_ref(q, k, v, causal: bool = True, softmax_scale=None):
     """Naive full-materialization attention. q/k/v: [B, S, H, hd]."""
@@ -68,15 +70,41 @@ def mamba_scan_ref(a, b, h0=None):
     return hs.swapaxes(0, 1), hl
 
 
-def int8_quant_ref(x, block: int = 256):
-    """Blockwise symmetric int8 quantization oracle."""
+def int8_quantize_blocks_ref(x):
+    """Symmetric per-block quantization. x: [nb, BLOCK] float.
+    Returns (q int8 [nb, BLOCK], scale f32 [nb, 1])."""
+    blocks = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+                        * INV_QMAX, SCALE_EPS)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize_blocks_ref(q, s):
+    """(q int8 [nb, BLOCK], s f32 [nb, 1]) -> f32 [nb, BLOCK]."""
+    return q.astype(jnp.float32) * s
+
+
+def int8_dequant_acc_ref(q, s):
+    """Reduce-scatter inner loop oracle: fold the n dequantized source
+    chunks sequentially (same order and f32 adds as the kernel's grid
+    loop, so interpret-mode comparisons can be bit-exact).
+    q: [n, nb, BLOCK] int8, s: [n, nb, 1] f32 -> f32 [nb, BLOCK]."""
+    acc = jnp.zeros(q.shape[1:], jnp.float32)
+    for i in range(q.shape[0]):
+        acc = acc + q[i].astype(jnp.float32) * s[i]
+    return acc
+
+
+def int8_quant_ref(x, block: int = BLOCK):
+    """Blockwise symmetric int8 quantization oracle (flattens + pads)."""
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % block
     if pad:
         flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block).astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-                        / 127.0, 1e-12)
+                        * INV_QMAX, SCALE_EPS)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     deq = (q.astype(jnp.float32) * scale).reshape(-1)
     n = x.size

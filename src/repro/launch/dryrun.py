@@ -42,7 +42,7 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                 verbose: bool = True, prefetch: bool = True,
                 prefetch_depth=None, mode_overrides=(),
                 microbatch: int = 0, async_grad_reduce: bool = False,
-                cross_step: bool = False):
+                cross_step: bool = False, param_compress: str = "none"):
     """mode_overrides: per-tensor strategy rules ((path-glob, mode), ...)
     layered on top of ``mode`` -- the dry-run reports the per-group
     byte breakdown whenever the resolution is mixed.
@@ -68,6 +68,7 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                         prefetch_depth=prefetch_depth,
                         async_grad_reduce=async_grad_reduce,
                         cross_step_pipeline=cross_step,
+                        param_compress=param_compress,
                         mode_overrides=tuple(mode_overrides or ()))
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
@@ -134,6 +135,11 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         "cross_step": acct["cross_step"],
         "cross_step_buffer_bytes_per_chip":
             acct["cross_step_buffer_bytes_per_chip"],
+        "param_compress": acct["param_compress"],
+        "stage1_dcn_gather_bytes_per_chip":
+            acct["stage1_dcn_gather_bytes_per_chip"],
+        "stage1_dcn_gather_bytes_exact":
+            acct["stage1_dcn_gather_bytes_exact"],
         "cache_by_group": acct["by_group"],
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": {
@@ -195,6 +201,10 @@ def main():
     ap.add_argument("--async-grad-reduce", action="store_true",
                     help="lower train cells with the async pod-axis "
                          "gradient-reduce stream")
+    ap.add_argument("--param-compress", default="none",
+                    choices=("none", "int8_pod"),
+                    help="qwZ: transport the stage-1 (pod-axis) weight "
+                         "all-gather as int8 blocks + f32 scales")
     ap.add_argument("--cross-step-pipeline", action="store_true",
                     help="lower the steady-state cross-step-pipelined "
                          "train step (implies the carry in the input "
@@ -236,7 +246,8 @@ def main():
                             mode_overrides=overrides,
                             microbatch=args.microbatch,
                             async_grad_reduce=args.async_grad_reduce,
-                            cross_step=args.cross_step_pipeline)
+                            cross_step=args.cross_step_pipeline,
+                            param_compress=args.param_compress)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,

@@ -103,12 +103,31 @@ def _axis_tuple(params: Dict[str, Any]) -> Tuple[str, ...]:
     return ()
 
 
+def _live_eqns(jx):
+    """Equations whose outputs (transitively) reach jx's outputs.
+
+    jaxpr-level DCE does not prune dead `custom_vjp_call_jaxpr` eqns --
+    a remat backward recompute whose result was policy-saved (the FCDP
+    host cache) leaves the quantized-gather custom vjp behind as a dead
+    eqn that XLA later removes. Counting it would double the stage-1
+    DCN bytes, so the walker only visits live eqns. (Literals carry a
+    ``val`` attribute; Vars do not.)"""
+    needed = {v for v in jx.outvars if not hasattr(v, "val")}
+    live = []
+    for eqn in reversed(jx.eqns):
+        if any(v in needed for v in eqn.outvars):
+            live.append(eqn)
+            needed.update(v for v in eqn.invars if not hasattr(v, "val"))
+    live.reverse()
+    return live
+
+
 def collect_collectives(jaxpr, mesh_sizes: Dict[str, int]) -> CollectiveStats:
     """Walk a (closed) jaxpr, summing per-device collective bytes."""
     stats = CollectiveStats()
 
     def visit(jx, mult: float):
-        for eqn in jx.eqns:
+        for eqn in _live_eqns(jx):
             name = eqn.primitive.name
             # recurse into sub-jaxprs
             if name == "scan":
@@ -124,7 +143,11 @@ def collect_collectives(jaxpr, mesh_sizes: Dict[str, int]) -> CollectiveStats:
                 for br in eqn.params.get("branches", []):
                     visit(br.jaxpr, mult)
                 continue
-            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            # custom_vjp_call_jaxpr carries its primal under fun_jaxpr
+            # (the quantized-collective custom vjps live there -- without
+            # descending, their fwd all_gathers would be invisible)
+            sub = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                   or eqn.params.get("fun_jaxpr"))
             if sub is not None:
                 visit(sub.jaxpr if hasattr(sub, "jaxpr") else sub, mult)
                 continue

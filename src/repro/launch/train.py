@@ -54,6 +54,8 @@ def build(args):
                         loss_chunk=args.loss_chunk,
                         min_shard_size=8 if args.smoke else 2048,
                         grad_compress=args.grad_compress,
+                        param_compress=args.param_compress,
+                        quant_impl=args.quant_impl,
                         # --prefetch-depth overrides --prefetch (an
                         # explicit bool beats a depth in SystemConfig,
                         # so drop the bool whenever a depth was given;
@@ -186,7 +188,14 @@ def main(argv=None):
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--loss-chunk", type=int, default=0)
     ap.add_argument("--activation-policy", default="save_all")
-    ap.add_argument("--grad-compress", default="none")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=("none", "int8_pod"))
+    ap.add_argument("--param-compress", default="none",
+                    choices=("none", "int8_pod"),
+                    help="qwZ: int8-transported stage-1 weight all-gather")
+    ap.add_argument("--quant-impl", default="jnp",
+                    choices=("jnp", "pallas", "pallas_interpret"),
+                    help="codepath for the int8 quantize/dequantize steps")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])

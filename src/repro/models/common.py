@@ -21,12 +21,16 @@ class MeshInfo:
     # transport for the large TP activation all-reduces (sublayer outputs):
     # 'bf16' (exact) or 'int8' (block-quantized, ~half the ICI bytes)
     act_psum: str = "bf16"
+    # quantize/dequantize codepath for the int8 transports
+    # (SystemConfig.quant_impl): 'jnp' | 'pallas' | 'pallas_interpret'
+    quant_impl: str = "jnp"
 
     @classmethod
-    def from_mesh(cls, mesh, act_psum: str = "bf16") -> "MeshInfo":
+    def from_mesh(cls, mesh, act_psum: str = "bf16",
+                  quant_impl: str = "jnp") -> "MeshInfo":
         return cls(tuple(mesh.axis_names),
                    tuple(mesh.shape[a] for a in mesh.axis_names),
-                   act_psum)
+                   act_psum, quant_impl)
 
     def size(self, name: str) -> int:
         return self.axis_sizes[self.axis_names.index(name)] if name in self.axis_names else 1
@@ -65,7 +69,7 @@ def psum_tp_act(x, mi: MeshInfo):
     dense train cells (see EXPERIMENTS.md SSPerf)."""
     if mi.act_psum == "int8" and mi.tp > 1:
         from repro.core.act_compress import int8_psum
-        return int8_psum(x, "model")
+        return int8_psum(x, "model", mi.quant_impl)
     return jax.lax.psum(x, "model")
 
 
@@ -77,7 +81,7 @@ def tp_region_in(x, mi: MeshInfo):
         vma = set(getattr(typeof(x), "vma", ()) or ())
         if "model" not in vma:
             from repro.core.act_compress import int8_bwd_psum
-            return int8_bwd_psum(x, "model")
+            return int8_bwd_psum(x, "model", mi.quant_impl)
     return x
 
 

@@ -29,7 +29,8 @@ class EncDec:
     def __init__(self, cfg: ModelConfig, sys: SystemConfig, mesh):
         assert cfg.num_encoder_layers > 0
         self.cfg, self.sys, self.mesh = cfg, sys, mesh
-        self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum)
+        self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum,
+                                     quant_impl=sys.quant_impl)
         self.n_enc = cfg.num_encoder_layers
         self.n_dec = cfg.num_layers
         self.plan_enc, self.plan_dec = ENC_PLAN, DEC_PLAN
@@ -39,7 +40,9 @@ class EncDec:
             sys, label_tree(self._build_defs()))
         self._plans = self.strategy.plan_tree(
             self._defs, mesh, sys.min_shard_size,
-            compress_bwd=(sys.grad_compress == "int8_pod"))
+            compress_bwd=(sys.grad_compress == "int8_pod"),
+            param_compress=(sys.param_compress == "int8_pod"),
+            quant_impl=sys.quant_impl)
 
     def _build_defs(self):
         cfg, tp = self.cfg, self.mi.tp

@@ -46,7 +46,8 @@ class LM:
 
     def __init__(self, cfg: ModelConfig, sys: SystemConfig, mesh):
         self.cfg, self.sys, self.mesh = cfg, sys, mesh
-        self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum)
+        self.mi = MeshInfo.from_mesh(mesh, act_psum=sys.act_psum,
+                                     quant_impl=sys.quant_impl)
         self.plan, self.n_groups = layer_plan(cfg)
         self.vpad = pad_vocab(cfg.vocab_size, self.mi.tp)
         # labels first (override rules match dotted paths), then the
@@ -56,7 +57,9 @@ class LM:
             sys, label_tree(self._build_defs()))
         self._plans = self.strategy.plan_tree(
             self._defs, mesh, sys.min_shard_size,
-            compress_bwd=(sys.grad_compress == "int8_pod"))
+            compress_bwd=(sys.grad_compress == "int8_pod"),
+            param_compress=(sys.param_compress == "int8_pod"),
+            quant_impl=sys.quant_impl)
 
     # -- parameters ---------------------------------------------------------
     def _build_defs(self):
