@@ -207,6 +207,20 @@ class SystemConfig:
     # implementation of the quantize/dequantize hot loops shared by
     # grad_compress / param_compress / act_psum
     quant_impl: str = "jnp"            # jnp | pallas | pallas_interpret
+    # gather-fused collective matmul (kernels/collective_matmul.py):
+    # consume stage-2 (intra-pod) weight chunks as the ring delivers
+    # them instead of all-gathering before the first matmul.
+    #   none      -- unfused (gather_stage2 then matmul)
+    #   ag_matmul -- fused forward; backward replays the exact unfused
+    #                op sequence, so losses/grads stay bit-identical
+    #   both      -- backward ring-fused too (matmul->reduce-scatter
+    #                dual; re-associates the dx sum, exact vs the
+    #                kernels/ref.py oracle rather than the unfused path)
+    # Eligibility is per-leaf and plan-level: see GatherPlan.fused in
+    # core/strategy.py.
+    fused_matmul: str = "none"         # none | ag_matmul | both
+    # per-chunk matmul codepath for the fused ring
+    fused_impl: str = "jnp"            # jnp | pallas | pallas_interpret
     # chunked cross-entropy (beyond-paper memory optimization)
     loss_chunk: int = 0                # 0 -> unchunked
     # param/compute dtypes
@@ -277,6 +291,14 @@ class SystemConfig:
         if self.quant_impl not in ("jnp", "pallas", "pallas_interpret"):
             raise ValueError(
                 f"unknown quant_impl {self.quant_impl!r}; "
+                "known: jnp, pallas, pallas_interpret")
+        if self.fused_matmul not in ("none", "ag_matmul", "both"):
+            raise ValueError(
+                f"unknown fused_matmul {self.fused_matmul!r}; "
+                "known: none, ag_matmul, both")
+        if self.fused_impl not in ("jnp", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"unknown fused_impl {self.fused_impl!r}; "
                 "known: jnp, pallas, pallas_interpret")
         if self.cross_step_pipeline and not self.async_grad_reduce:
             raise ValueError(

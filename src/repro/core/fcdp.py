@@ -72,18 +72,53 @@ def make_gather_plan(pdef: ParamDef, mesh, mode,
                      min_shard_size: int = 0,
                      compress_bwd: bool = False,
                      param_compress: bool = False,
-                     quant_impl: str = "jnp") -> GatherPlan:
+                     quant_impl: str = "jnp",
+                     fused_matmul: str = "none",
+                     fused_impl: str = "jnp") -> GatherPlan:
     """Derive the gather plan matching ``storage_spec`` for this param.
     ``mode`` is a strategy name or ShardingStrategy object."""
     return resolve_strategy(mode).gather_plan(
-        pdef, mesh, min_shard_size, compress_bwd, param_compress, quant_impl)
+        pdef, mesh, min_shard_size, compress_bwd, param_compress, quant_impl,
+        fused_matmul, fused_impl)
 
 
 def plan_tree(defs, mesh, mode, min_shard_size: int = 0,
               compress_bwd: bool = False, param_compress: bool = False,
-              quant_impl: str = "jnp"):
+              quant_impl: str = "jnp", fused_matmul: str = "none",
+              fused_impl: str = "jnp"):
     return resolve_strategy(mode).plan_tree(
-        defs, mesh, min_shard_size, compress_bwd, param_compress, quant_impl)
+        defs, mesh, min_shard_size, compress_bwd, param_compress, quant_impl,
+        fused_matmul, fused_impl)
+
+
+@jax.tree_util.register_pytree_node_class
+class FusedParam:
+    """A stage-1 cached shard standing in for the fully gathered weight.
+
+    When a plan is flagged ``fused``, ``gather_stage2`` skips the intra
+    all-gather and hands the consumer this wrapper instead: the cache
+    (marked for the remat policy exactly like the unfused path) plus the
+    plan, which carries the ring axis and mode. ``models/layers.matmul``
+    dispatches on it -- the stage-2 gather then happens INSIDE the
+    consuming matmul's ring schedule (kernels/collective_matmul.py),
+    overlapped chunk by chunk. Registered as a pytree so it rides
+    ``jax.tree`` maps, scan carries, and ``jax.checkpoint`` untouched;
+    the plan is static aux data."""
+
+    def __init__(self, cache: jax.Array, plan: GatherPlan):
+        self.cache = cache
+        self.plan = plan
+
+    def tree_flatten(self):
+        return (self.cache,), self.plan
+
+    @classmethod
+    def tree_unflatten(cls, plan, children):
+        return cls(children[0], plan)
+
+    def __repr__(self) -> str:
+        return f"FusedParam({getattr(self.cache, 'shape', None)}, " \
+               f"fused={self.plan.fused!r})"
 
 
 def _ag_fn(plan: GatherPlan):
@@ -130,11 +165,19 @@ def gather_stage1(w: jax.Array, plan: GatherPlan) -> jax.Array:
 def gather_stage2(w: jax.Array, plan: GatherPlan) -> jax.Array:
     """Stage 2 (intra / ICI) all-gather: cached shard -> full (TP-local)
     parameter, with the cache/full named-checkpoint boundaries marked for
-    the remat policy. Must run inside shard_map."""
+    the remat policy. Must run inside shard_map.
+
+    Fused plans return a :class:`FusedParam` instead of gathering: the
+    cache boundary is marked identically (so the remat placement is
+    unchanged) but the intra gather -- and with it the FULL_NAME mark,
+    since no full weight ever materializes -- is deferred into the
+    consuming matmul's ring."""
     if not plan.is_gathered:
         return w
     if plan.cache_after == 1:
         w = checkpoint_name(w, cache_name(plan))
+    if plan.is_fused and plan.intra_axes:
+        return FusedParam(w, plan)
     if plan.intra_axes:
         w = _ag_fn(plan)(w, plan.intra_axes, plan.fsdp_dim)
     if plan.cache_after == 2:

@@ -55,6 +55,13 @@ class ParamDef:
     # carries its resolved name, which is the dispatch/accounting key
     # for the CompositeStrategy facade and the per-group planner split.
     strategy: Optional[str] = None
+    # the leaf is consumed as the RHS of one [..., K] @ [K, N] output
+    # projection routed through models/layers.matmul -- the consumption
+    # pattern the gather-fused collective matmul requires. Opt-in at the
+    # def site because shape alone cannot tell a projection from, e.g.,
+    # an embedding table with the same ("tp","fsdp") dims; the plan-level
+    # rule in core/strategy.gather_plan gates further.
+    fusable: bool = False
 
     def __post_init__(self):
         assert len(self.shape) == len(self.dims), (self.shape, self.dims)

@@ -91,6 +91,14 @@ class GatherPlan:
     # the quantize/dequantize codepath (jnp | pallas | pallas_interpret)
     compress_fwd: bool = False
     quant_impl: str = "jnp"
+    # gather-fused collective matmul (kernels/collective_matmul.py): the
+    # stage-2 intra all-gather is folded into the consuming matmul's
+    # ring schedule instead of completing first. 'none' | 'ag_matmul'
+    # (fused fwd, bit-parity bwd) | 'both' (bwd ring-fused too);
+    # fused_impl selects the per-chunk matmul codepath
+    # (jnp | pallas | pallas_interpret)
+    fused: str = "none"
+    fused_impl: str = "jnp"
     # where the backward reads the cached stage from, carried PER PLAN so
     # leaves of different strategy groups can coexist inside one
     # checkpointed layer body (core/fcdp.py keys the remat policy on a
@@ -105,6 +113,11 @@ class GatherPlan:
     def prefetchable(self) -> bool:
         """True when a non-empty stage-1 exists to issue a layer ahead."""
         return self.is_gathered and bool(self.inter_axes)
+
+    @property
+    def is_fused(self) -> bool:
+        """True when the stage-2 gather is consumed by the fused ring."""
+        return self.fused != "none"
 
 
 class ShardingStrategy:
@@ -144,6 +157,15 @@ class ShardingStrategy:
     # with no stage 1 (MiCS/hier) decline structurally; a group can also
     # decline explicitly under per-tensor mixed sharding.
     supports_quantized_gather: bool = True
+    # whether the stage-2 (intra / ICI) all-gather may be replaced by the
+    # gather-fused collective matmul (kernels/collective_matmul.py) under
+    # SystemConfig.fused_matmul != 'none'. Every built-in opts in -- the
+    # ring consumes whatever hands it a stage-2 shard (a stage-1 cache,
+    # a regather, or pod-replicated storage) -- but the PLAN-level gate
+    # in gather_plan still declines leaves whose storage layout forbids
+    # it (see there); a group can also decline explicitly under
+    # per-tensor mixed sharding.
+    supports_fused_matmul: bool = True
 
     @property
     def supports_prefetch(self) -> bool:
@@ -210,7 +232,9 @@ class ShardingStrategy:
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
                     compress_bwd: bool = False,
                     param_compress: bool = False,
-                    quant_impl: str = "jnp") -> GatherPlan:
+                    quant_impl: str = "jnp",
+                    fused_matmul: str = "none",
+                    fused_impl: str = "jnp") -> GatherPlan:
         """Derive the two-stage gather plan matching ``storage_spec``.
 
         If the def carries a 'stack' (scan) dimension, the returned fsdp
@@ -243,20 +267,44 @@ class ShardingStrategy:
         quantizable = (bool(inter) and not pdef.frozen
                        and pdef.size() // (degree * stack)
                        >= QUANT_MIN_SHARD_ELEMS)
+        # gather-fused collective matmul eligibility: the def site must
+        # opt in (ParamDef.fusable -- the leaf is an output projection
+        # consumed through models/layers.matmul) and the ring consumes
+        # a [K, N]-shaped body weight whose OUTPUT dim shards over
+        # exactly one intra axis (column-concat decomposition; the
+        # contraction is never split, preserving bit-exactness), fed by
+        # either a stage-1 cache (cache_after=1) or a regather -- a
+        # cache_after=2 device/host placement caches the FULLY gathered
+        # weight, so there is no per-use stage-2 gather left to fuse:
+        # that storage layout declines. Frozen leaves store pre-gathered
+        # under FCDP-Comm (same reason) and stay exact elsewhere.
+        body_rank = len(pdef.shape) - (1 if "stack" in pdef.dims else 0)
+        intra_deg = math.prod(mesh.shape[a] for a in intra) if intra else 1
+        fusable = (fused_matmul != "none"
+                   and self.supports_fused_matmul
+                   and getattr(pdef, "fusable", False)
+                   and body_rank == 2 and body_dim == 1
+                   and not pdef.frozen
+                   and len(intra) == 1 and intra_deg > 1
+                   and (cache_after == 1 or self.cache_placement == "regather"))
         return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
                           compress_bwd=(compress_bwd and quantizable),
                           compress_fwd=(param_compress and quantizable
                                         and self.supports_quantized_gather),
                           quant_impl=quant_impl,
+                          fused=(fused_matmul if fusable else "none"),
+                          fused_impl=fused_impl,
                           placement=self.cache_placement)
 
     def plan_tree(self, defs, mesh, min_shard_size: int = 0,
                   compress_bwd: bool = False, param_compress: bool = False,
-                  quant_impl: str = "jnp"):
+                  quant_impl: str = "jnp", fused_matmul: str = "none",
+                  fused_impl: str = "jnp"):
         from repro.core.partition import tree_map_defs
         return tree_map_defs(
             lambda p: self.gather_plan(p, mesh, min_shard_size, compress_bwd,
-                                       param_compress, quant_impl),
+                                       param_compress, quant_impl,
+                                       fused_matmul, fused_impl),
             defs)
 
     # -- FCDP-Cache ----------------------------------------------------------
@@ -475,13 +523,18 @@ class CompositeStrategy(ShardingStrategy):
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
                     compress_bwd: bool = False,
                     param_compress: bool = False,
-                    quant_impl: str = "jnp") -> GatherPlan:
-        # per-leaf dispatch also gates qwZ per group: the leaf strategy's
-        # own supports_quantized_gather decides, so a declining group
-        # keeps its exact bf16 stage-1 gather inside a quantized bundle
+                    quant_impl: str = "jnp",
+                    fused_matmul: str = "none",
+                    fused_impl: str = "jnp") -> GatherPlan:
+        # per-leaf dispatch also gates qwZ and the fused collective
+        # matmul per group: the leaf strategy's own
+        # supports_quantized_gather / supports_fused_matmul decide, so a
+        # declining group keeps its exact bf16 stage-1 gather (or its
+        # unfused stage-2 gather) inside a mixed bundle
         return self._for(pdef).gather_plan(pdef, mesh, min_shard_size,
                                            compress_bwd, param_compress,
-                                           quant_impl)
+                                           quant_impl, fused_matmul,
+                                           fused_impl)
 
     def cached_bytes_for(self, pdef, plan: GatherPlan, mi) -> float:
         return self._for(pdef).cached_bytes_for(pdef, plan, mi)
@@ -519,6 +572,12 @@ class CompositeStrategy(ShardingStrategy):
         # whole-model view only; the per-leaf gate is the leaf group's
         # own attribute (see gather_plan above)
         return any(s.supports_quantized_gather for s in self.groups.values())
+
+    @property
+    def supports_fused_matmul(self) -> bool:
+        # whole-model view only; the per-leaf gate is the leaf group's
+        # own attribute (see gather_plan above)
+        return any(s.supports_fused_matmul for s in self.groups.values())
 
     # device_cache_groups: inherited -- the base guard reads the
     # supports_device_cache property overridden above

@@ -1,8 +1,10 @@
 """jit'd dispatch wrappers for the Pallas kernels.
 
-Each op takes `interpret` (CPU-validated interpret mode vs real TPU
-lowering) and falls back to the pure-jnp oracle (`impl='jnp'`) -- the
-model code selects via SystemConfig.attn_impl etc.
+One ``impl`` keyword everywhere: 'jnp' (pure-jnp oracle), 'pallas'
+(real lowering), or 'pallas_interpret' (CPU-validated interpret mode).
+The legacy ``interpret=True`` boolean is kept as a back-compat shim --
+it upgrades impl='pallas' to 'pallas_interpret'. Model code selects via
+SystemConfig.attn_impl / quant_impl / fused_impl.
 """
 from __future__ import annotations
 
@@ -14,6 +16,20 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 
+IMPLS = ("jnp", "pallas", "pallas_interpret")
+
+
+def resolve_impl(impl: str, interpret: bool = False):
+    """Normalize (impl, legacy interpret flag) -> (impl, interpret).
+
+    'pallas_interpret' and interpret=True both mean interpret-mode
+    Pallas; the returned impl is 'jnp' or 'pallas'."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    if impl == "jnp":
+        return "jnp", False
+    return "pallas", interpret or impl == "pallas_interpret"
+
 
 @functools.partial(jax.jit, static_argnames=("causal", "softmax_scale",
                                              "block_q", "block_k",
@@ -23,6 +39,7 @@ def flash_attention(q, k, v, causal: bool = True,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False, impl: str = "pallas"):
     """q/k/v: [B, S, H, hd] (kv pre-expanded to H heads)."""
+    impl, interpret = resolve_impl(impl, interpret)
     if impl == "jnp":
         return kref.attention_ref(q, k, v, causal=causal,
                                   softmax_scale=softmax_scale)
@@ -36,6 +53,7 @@ def flash_attention(q, k, v, causal: bool = True,
 def wkv6(r, k, v, logw, u, chunk: int = 64, interpret: bool = False,
          impl: str = "pallas"):
     """RWKV-6 WKV. r/k/v/logw: [B,S,H,hd]; u: [H,hd]."""
+    impl, interpret = resolve_impl(impl, interpret)
     if impl == "jnp":
         return kref.rwkv6_ref(r, k, v, logw, u)
     from repro.kernels.rwkv6_scan import wkv6_chunked
@@ -46,6 +64,7 @@ def wkv6(r, k, v, logw, u, chunk: int = 64, interpret: bool = False,
 def int8_quantize_blocks(x, interpret: bool = False, impl: str = "pallas"):
     """Symmetric per-block int8 quantize. x: [nb, BLOCK] float.
     Returns (q int8 [nb, BLOCK], scale f32 [nb, 1])."""
+    impl, interpret = resolve_impl(impl, interpret)
     if impl == "jnp":
         return kref.int8_quantize_blocks_ref(x)
     from repro.kernels.quant import quantize_blocks
@@ -56,6 +75,7 @@ def int8_quantize_blocks(x, interpret: bool = False, impl: str = "pallas"):
 def int8_dequantize_blocks(q, s, interpret: bool = False,
                            impl: str = "pallas"):
     """(q int8 [nb, BLOCK], s f32 [nb, 1]) -> f32 [nb, BLOCK]."""
+    impl, interpret = resolve_impl(impl, interpret)
     if impl == "jnp":
         return kref.int8_dequantize_blocks_ref(q, s)
     from repro.kernels.quant import dequantize_blocks
@@ -67,6 +87,7 @@ def int8_dequant_accumulate(q, s, interpret: bool = False,
                             impl: str = "pallas"):
     """Reduce-scatter inner loop: sequential dequant-accumulate of the
     n source chunks. q: [n, nb, BLOCK] int8, s: [n, nb, 1] f32."""
+    impl, interpret = resolve_impl(impl, interpret)
     if impl == "jnp":
         return kref.int8_dequant_acc_ref(q, s)
     from repro.kernels.quant import dequant_accumulate
@@ -78,6 +99,7 @@ def int8_dequant_accumulate(q, s, interpret: bool = False,
 def ssm_scan(a, b, chunk: int = 128, channel_block: int = 512,
              interpret: bool = False, impl: str = "pallas"):
     """Diagonal SSM scan h_t = a_t h_{t-1} + b_t over [B,S,C]."""
+    impl, interpret = resolve_impl(impl, interpret)
     if impl == "jnp":
         B, S, C = a.shape
         hs, _ = kref.mamba_scan_ref(a.reshape(B, S, C, 1),
@@ -86,3 +108,18 @@ def ssm_scan(a, b, chunk: int = 128, channel_block: int = 512,
     from repro.kernels.mamba_scan import mamba_scan
     return mamba_scan(a, b, chunk=chunk, channel_block=channel_block,
                       interpret=interpret)
+
+
+def collective_ag_matmul(x, w_shard, axis_name: str, mode: str = "ag_matmul",
+                         impl: str = "jnp", block_m: int = 128,
+                         block_n: int = 128, interpret: bool = False):
+    """Gather-fused collective matmul (kernels/collective_matmul.py):
+    consumes the stage-2 column chunks as the ring delivers them.
+
+    NOT jit-wrapped like the ops above: it carries named-axis
+    collectives (ppermute / psum_scatter) and a custom_vjp, so it must
+    trace directly inside the caller's shard_map body."""
+    from repro.kernels.collective_matmul import fused_matmul
+    impl, interpret = resolve_impl(impl, interpret)
+    return fused_matmul(x, w_shard, axis_name, mode, impl, block_m,
+                        block_n, interpret)

@@ -96,6 +96,65 @@ def int8_dequant_acc_ref(q, s):
     return acc
 
 
+def matmul_chunk_ref(x, w, block_m: int = 128, block_n: int = 128):
+    """Tile-loop mirror of collective_matmul.matmul_chunk: pad to the
+    (block_m, block_n) grid, one jnp.dot per tile with the contraction
+    kept whole, slice the pad back off. Interpret-mode Pallas executes
+    exactly this per-tile dot, so comparisons can be bit-exact."""
+    M, K = x.shape
+    N = w.shape[1]
+    pm, pn = (-M) % block_m, (-N) % block_n
+    xp = jnp.pad(x, ((0, pm), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, pn)))
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    rows = []
+    for i in range(xp.shape[0] // block_m):
+        tiles = [jnp.dot(xp[i * block_m:(i + 1) * block_m],
+                         wp[:, j * block_n:(j + 1) * block_n])
+                 for j in range(wp.shape[1] // block_n)]
+        rows.append(jnp.concatenate(tiles, axis=1))
+    return jnp.concatenate(rows, axis=0)[:M, :N].astype(out_dtype)
+
+
+def ag_matmul_ref(x, w_chunks):
+    """Oracle for the fused all-gather->matmul ring: per-chunk matmuls
+    written to disjoint column blocks in global (rank) order. x: [M, K];
+    w_chunks: [n, K, Nc] (chunk j = rank j's shard). Chunk results are
+    disjoint, so the ring's owner schedule is order-irrelevant here."""
+    return jnp.concatenate([x @ w_chunks[j]
+                            for j in range(w_chunks.shape[0])], axis=-1)
+
+
+def matmul_rs_ref(a_chunks, b_chunks, rank: int):
+    """Oracle for the fused matmul->reduce-scatter ring, for one rank.
+
+    a_chunks: [n, J, M], b_chunks: [n, M, N] (per-rank local operands).
+    Chunk ``rank`` is born on rank+1 and accumulates hop by hop (ranks
+    rank+2, ..., rank-1, finally rank) -- mirror that exact left-to-
+    right order so interpret-mode comparisons can be bit-exact."""
+    n = a_chunks.shape[0]
+    Nc = b_chunks.shape[2] // n
+    acc = None
+    for h in range(n):
+        src = (rank + 1 + h) % n
+        part = a_chunks[src] @ b_chunks[src][:, rank * Nc:(rank + 1) * Nc]
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def fused_bwd_dx_ref(g, w_chunks, rank: int):
+    """Oracle for mode='both' dx: per-chunk contributions accumulated in
+    ring order (owner = (rank + s) % n at step s). g: [M, N] cotangent;
+    w_chunks: [n, K, Nc]. Returns [M, K]."""
+    n, _, Nc = w_chunks.shape
+    dx = None
+    for s in range(n):
+        owner = (rank + s) % n
+        part = g[:, owner * Nc:(owner + 1) * Nc] @ w_chunks[owner].T
+        dx = part if dx is None else dx + part
+    return dx
+
+
 def int8_quant_ref(x, block: int = BLOCK):
     """Blockwise symmetric int8 quantization oracle (flattens + pads)."""
     flat = x.reshape(-1)

@@ -28,6 +28,7 @@ from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
                                  strategy_names)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collect_collectives, flops_bytes_from_jaxpr,
+                                   fused_overlap_credit,
                                    parse_stablehlo_counts, roofline_report)
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "results"
@@ -42,7 +43,8 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                 verbose: bool = True, prefetch: bool = True,
                 prefetch_depth=None, mode_overrides=(),
                 microbatch: int = 0, async_grad_reduce: bool = False,
-                cross_step: bool = False, param_compress: str = "none"):
+                cross_step: bool = False, param_compress: str = "none",
+                fused_matmul: str = "none"):
     """mode_overrides: per-tensor strategy rules ((path-glob, mode), ...)
     layered on top of ``mode`` -- the dry-run reports the per-group
     byte breakdown whenever the resolution is mixed.
@@ -69,6 +71,7 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                         async_grad_reduce=async_grad_reduce,
                         cross_step_pipeline=cross_step,
                         param_compress=param_compress,
+                        fused_matmul=fused_matmul,
                         mode_overrides=tuple(mode_overrides or ()))
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
@@ -115,13 +118,17 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         ca = ca[0]
     flops_ca = float(ca.get("flops", 0.0))     # lower bound: loops counted 1x
     bytes_ca = float(ca.get("bytes accessed", 0.0))
+    fused_credit = fused_overlap_credit(
+        bundle.def_leaves, bundle.plan_leaves, _mesh_sizes(mesh), cell,
+        tp=bundle.mi.tp)
     rep = roofline_report(
         flops_exact, bytes_naive, stats, cfg, cell, n_chips,
         prefetch=depth_live,
         inflight_bytes=acct["prefetch_buffer_bytes_per_chip"],
         group_bytes=acct["by_group"],
         cross_step=acct["cross_step"],
-        cross_step_bytes=acct["cross_step_buffer_bytes_per_chip"])
+        cross_step_bytes=acct["cross_step_buffer_bytes_per_chip"],
+        fused=fused_credit)
     result = {
         "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
         "mode": mode, "status": "ok",
@@ -136,6 +143,9 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         "cross_step_buffer_bytes_per_chip":
             acct["cross_step_buffer_bytes_per_chip"],
         "param_compress": acct["param_compress"],
+        "fused_matmul": fused_matmul,
+        "fused_n_leaves": fused_credit["n_fused_leaves"],
+        "fused_overlap_credit_s": fused_credit["credit_s"],
         "stage1_dcn_gather_bytes_per_chip":
             acct["stage1_dcn_gather_bytes_per_chip"],
         "stage1_dcn_gather_bytes_exact":
@@ -205,6 +215,12 @@ def main():
                     choices=("none", "int8_pod"),
                     help="qwZ: transport the stage-1 (pod-axis) weight "
                          "all-gather as int8 blocks + f32 scales")
+    ap.add_argument("--fused-matmul", default="none",
+                    choices=("none", "ag_matmul", "both"),
+                    help="gather-fused collective matmul: consume stage-2 "
+                         "weight chunks inside the ring-scheduled matmul "
+                         "(ag_matmul: fused fwd, bit-parity bwd; both: bwd "
+                         "ring-fused too)")
     ap.add_argument("--cross-step-pipeline", action="store_true",
                     help="lower the steady-state cross-step-pipelined "
                          "train step (implies the carry in the input "
@@ -247,7 +263,8 @@ def main():
                             microbatch=args.microbatch,
                             async_grad_reduce=args.async_grad_reduce,
                             cross_step=args.cross_step_pipeline,
-                            param_compress=args.param_compress)
+                            param_compress=args.param_compress,
+                            fused_matmul=args.fused_matmul)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,

@@ -303,13 +303,67 @@ def model_flops(cfg, cell, n_chips: int) -> float:
     return 2.0 * n_active * tokens
 
 
+def fused_overlap_credit(def_leaves, plan_leaves, mesh_sizes: Dict[str, int],
+                         cell, tp: int = 1,
+                         dtype_bytes: float = 2.0) -> Dict[str, Any]:
+    """Measured per-layer overlap credit of the gather-fused collective
+    matmul, derived from the fused kernel's own chunk schedule.
+
+    For every plan flagged ``fused`` the ring replaces the stage-2 intra
+    all-gather with (n-1) chunk ``ppermute`` hops issued behind the
+    per-chunk matmuls -- byte-neutral on the wire (ring bytes equal the
+    tiled all-gather's (n-1)/n factor), but each hop's transfer hides
+    under the concurrent chunk matmul. The credit per ring pass is
+    ``sum over transfer steps of min(chunk_bytes/ICI_BW,
+    chunk_flops/PEAK_FLOPS)`` (kernels/collective_matmul.chunk_schedule)
+    times the leaf's stack (layer) count. mode='ag_matmul' runs one ring
+    per layer (the backward replays the unfused sequence for bit
+    parity); mode='both' runs three identically-shaped rings (forward,
+    dx, and the dw matmul->reduce-scatter dual, whose accumulator hops
+    match the weight-chunk bytes and flops exactly).
+    """
+    from repro.kernels.collective_matmul import chunk_schedule
+    tokens = (cell.global_batch * cell.seq_len if cell.kind != "decode"
+              else cell.global_batch)
+    dp = math.prod(s for a, s in mesh_sizes.items() if a != "model") or 1
+    m_tokens = tokens / dp
+    credit = 0.0
+    n_leaves = 0
+    modes = set()
+    for d, p in zip(def_leaves, plan_leaves):
+        if getattr(p, "fused", "none") == "none":
+            continue
+        n = mesh_sizes.get(p.intra_axes[0], 1)
+        if n <= 1:
+            continue
+        body = [(dim, s) for dim, s in zip(d.dims, d.shape) if dim != "stack"]
+        stack = (d.shape[d.dims.index("stack")]
+                 if "stack" in d.dims else 1)
+        k_local = body[0][1] // (tp if body[0][0] == "tp" else 1)
+        n_cols_chunk = body[1][1] // n
+        passes = 3 if p.fused == "both" else 1
+        sched = chunk_schedule(m_tokens, k_local, n_cols_chunk, n,
+                               dtype_bytes)
+        per_ring = sum(min(b / ICI_BW, f / PEAK_FLOPS)
+                       for b, f in sched if b > 0.0)
+        credit += passes * stack * per_ring
+        n_leaves += 1
+        modes.add(p.fused)
+    return {"enabled": n_leaves > 0,
+            "mode": (sorted(modes)[0] if len(modes) == 1
+                     else ",".join(sorted(modes)) if modes else "none"),
+            "n_fused_leaves": n_leaves,
+            "credit_s": credit}
+
+
 def roofline_report(flops_per_chip: float, bytes_per_chip: float,
                     stats: CollectiveStats, cfg, cell,
                     n_chips: int, prefetch: Any = False,
                     inflight_bytes: float = 0.0,
                     group_bytes: Optional[Dict[str, Any]] = None,
                     cross_step: bool = False,
-                    cross_step_bytes: float = 0.0
+                    cross_step_bytes: float = 0.0,
+                    fused: Optional[Dict[str, Any]] = None
                     ) -> Dict[str, Any]:
     """Derive the three roofline terms, plus -- when the streaming
     gather scheduler's prefetch is active -- the overlap credit: the
@@ -337,6 +391,14 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     tier (host cache vs ring slots vs regather), echoed verbatim as
     ``groups``.
 
+    ``fused`` (optional) is :func:`fused_overlap_credit`'s dict: the
+    gather-fused collective matmul's measured per-layer overlap credit.
+    The ring's ppermute hops are byte-neutral with the stage-2
+    all-gather they replace (so ``collective_s`` is unchanged), but each
+    hop hides under its concurrent chunk matmul; the credit is
+    subtracted from the exposed collective time, clamped to the ICI
+    term (a ring cannot hide more transfer than it performs).
+
     ``cross_step``/``cross_step_bytes`` describe scheduler stream 3 (the
     cross-step pipelined optimizer epilogue): the bandwidth model is
     unchanged -- per-step DCN volume is byte-identical, the once-per-step
@@ -356,7 +418,10 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
     stage1_ag_bytes = stats.by_op_axis.get("all_gather/pod", 0.0)
     overlapped_bytes = stage1_ag_bytes if depth > 0 else 0.0
     overlapped_t = min(overlapped_bytes / DCN_BW, compute_t)
-    coll_exposed_t = coll_t - overlapped_t
+    fused = dict(fused or {})
+    fused_credit_t = min(float(fused.get("credit_s", 0.0)), ici_t)
+    fused["credit_applied_s"] = fused_credit_t
+    coll_exposed_t = max(coll_t - overlapped_t - fused_credit_t, 0.0)
     terms = {"compute": compute_t, "memory": memory_t,
              "collective": coll_exposed_t}
     dominant = max(terms, key=terms.get)
@@ -368,6 +433,7 @@ def roofline_report(flops_per_chip: float, bytes_per_chip: float,
             "enabled": bool(cross_step),
             "carry_buffer_bytes_per_chip": float(cross_step_bytes),
         },
+        "fused": fused,
         "prefetch": {
             "enabled": depth > 0,
             "depth": depth,

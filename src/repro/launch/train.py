@@ -56,6 +56,8 @@ def build(args):
                         grad_compress=args.grad_compress,
                         param_compress=args.param_compress,
                         quant_impl=args.quant_impl,
+                        fused_matmul=args.fused_matmul,
+                        fused_impl=args.fused_impl,
                         # --prefetch-depth overrides --prefetch (an
                         # explicit bool beats a depth in SystemConfig,
                         # so drop the bool whenever a depth was given;
@@ -196,6 +198,16 @@ def main(argv=None):
     ap.add_argument("--quant-impl", default="jnp",
                     choices=("jnp", "pallas", "pallas_interpret"),
                     help="codepath for the int8 quantize/dequantize steps")
+    ap.add_argument("--fused-matmul", default="none",
+                    choices=("none", "ag_matmul", "both"),
+                    help="gather-fused collective matmul: consume stage-2 "
+                         "shards as they arrive in a ppermute ring instead "
+                         "of all-gathering before the matmul (ag_matmul = "
+                         "forward only, both = forward + dual grad rings)")
+    ap.add_argument("--fused-impl", default="jnp",
+                    choices=("jnp", "pallas", "pallas_interpret"),
+                    help="codepath for the per-chunk matmul inside the "
+                         "fused ring")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])

@@ -232,7 +232,8 @@ def attention_block(x, wq, wk, wv, wo, bq, bk, bv, cfg, mi: MeshInfo,
     mask = local_head_mask(mi, padded_heads, cfg.num_heads)
     out = out * mask[None, None, :, None].astype(out.dtype)
     out = out.reshape(B, S, h_local * hd)
-    y = out @ wo
+    from repro.models.layers import matmul
+    y = matmul(out, wo)
     t = _lora_term(out, lora, "wo", lora_alpha)
     if t is not None:
         y = y + t.astype(y.dtype)

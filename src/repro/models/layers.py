@@ -55,6 +55,29 @@ def apply_rope(x, positions, theta: float = 10000.0):
 
 
 # ---------------------------------------------------------------------------
+# Matmul (gather-fused dispatch seam)
+# ---------------------------------------------------------------------------
+
+def matmul(x, w):
+    """``x @ w`` where ``w`` may be a :class:`core.fcdp.FusedParam`.
+
+    A fused param is the stage-1 cached shard of an output-dim-sharded
+    weight: the stage-2 intra all-gather happens INSIDE the ring-
+    scheduled matmul (kernels/collective_matmul.py), chunk transfers
+    overlapped with per-chunk compute. Every output-projection matmul
+    routes through here so the plan decides, per leaf, whether its
+    weight arrives whole or as a ring."""
+    from repro.core.fcdp import FusedParam
+    if isinstance(w, FusedParam):
+        from repro.kernels import ops as kops
+        plan = w.plan
+        return kops.collective_ag_matmul(
+            x, w.cache, plan.intra_axes[0], mode=plan.fused,
+            impl=plan.fused_impl)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 
@@ -67,13 +90,13 @@ def act_fn(name: str):
 def glu_mlp(x, w_in, w_gate, w_out, act: str, mi: MeshInfo):
     """Column-parallel in/gate, row-parallel out (+psum over model)."""
     h = act_fn(act)(x @ w_gate) * (x @ w_in)
-    y = h @ w_out
+    y = matmul(h, w_out)
     return psum_tp_act(y, mi)
 
 
 def dense_mlp(x, w_in, w_out, act: str, mi: MeshInfo):
     h = act_fn(act)(x @ w_in)
-    return psum_tp_act(h @ w_out, mi)
+    return psum_tp_act(matmul(h, w_out), mi)
 
 
 # ---------------------------------------------------------------------------

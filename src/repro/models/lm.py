@@ -59,7 +59,8 @@ class LM:
             self._defs, mesh, sys.min_shard_size,
             compress_bwd=(sys.grad_compress == "int8_pod"),
             param_compress=(sys.param_compress == "int8_pod"),
-            quant_impl=sys.quant_impl)
+            quant_impl=sys.quant_impl,
+            fused_matmul=sys.fused_matmul, fused_impl=sys.fused_impl)
 
     # -- parameters ---------------------------------------------------------
     def _build_defs(self):

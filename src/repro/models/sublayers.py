@@ -28,6 +28,7 @@ from repro.core.partition import ParamDef
 from repro.models import attention as attn_mod
 from repro.models.common import (MeshInfo, local_head_mask, pad_heads,
                                  psum_tp, psum_tp_act, tp_rank)
+from repro.models import layers
 from repro.models.layers import act_fn, rms_norm
 
 BF16 = jnp.bfloat16
@@ -46,7 +47,7 @@ def attn_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
         "wq": ParamDef((d, hp * hd), ("fsdp", "tp")),
         "wk": ParamDef((d, kvd), ("fsdp", None)),
         "wv": ParamDef((d, kvd), ("fsdp", None)),
-        "wo": ParamDef((hp * hd, d), ("tp", "fsdp")),
+        "wo": ParamDef((hp * hd, d), ("tp", "fsdp"), fusable=True),
         "norm": ParamDef((d,), ("fsdp",), init="ones"),
     }
     if cfg.qkv_bias:
@@ -157,7 +158,7 @@ def attn_decode(cfg, sys, mi: MeshInfo, p, x, state, seq_sharded: bool = False):
         q, k_exp, v_exp, valid, mi, seq_ax)
     mask = local_head_mask(mi, hp, cfg.num_heads)
     out = out * mask[None, None, :, None].astype(out.dtype)
-    y = out.reshape(B, 1, h_local * hd) @ p["wo"]
+    y = layers.matmul(out.reshape(B, 1, h_local * hd), p["wo"])
     y = psum_tp(y, mi)
     return x + y, {"k": k_cache, "v": v_cache, "idx": state["idx"] + 1}
 
@@ -193,7 +194,7 @@ def xattn_apply(cfg, sys, mi: MeshInfo, p, x, enc_kv):
     out = attn_mod.chunked_causal_attention(q, k_exp, v_exp, causal=False)
     mask = local_head_mask(mi, hp, cfg.num_heads)
     out = out * mask[None, None, :, None].astype(out.dtype)
-    y = out.reshape(B, S, h_local * hd) @ p["wo"]
+    y = layers.matmul(out.reshape(B, S, h_local * hd), p["wo"])
     return x + psum_tp(y, mi), None
 
 
@@ -214,7 +215,7 @@ def mlp_defs(cfg: ModelConfig, tp: int, d_ff: Optional[int] = None) -> Dict[str,
     d, f = cfg.d_model, (d_ff or cfg.d_ff)
     out = {
         "w_in": ParamDef((d, f), ("fsdp", "tp")),
-        "w_out": ParamDef((f, d), ("tp", "fsdp")),
+        "w_out": ParamDef((f, d), ("tp", "fsdp"), fusable=True),
         "norm": ParamDef((d,), ("fsdp",), init="ones"),
     }
     if cfg.act in ("swiglu", "geglu"):
@@ -229,7 +230,7 @@ def mlp_apply(cfg, sys, mi: MeshInfo, p, x):
         z = act_fn(cfg.act)(h @ p["w_gate"]) * (h @ p["w_in"])
     else:
         z = act_fn(cfg.act)(h @ p["w_in"])
-    y = z @ p["w_out"]
+    y = layers.matmul(z, p["w_out"])
     return x + psum_tp_act(y, mi)
 
 
@@ -473,7 +474,7 @@ def mamba_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
         "dt_bias": ParamDef((d_in,), ("tp",), init="zeros"),
         "A_log": ParamDef((d_in, ns), ("tp", None), init="ones"),
         "D_skip": ParamDef((d_in,), ("tp",), init="ones"),
-        "out_proj": ParamDef((d_in, d), ("tp", "fsdp")),
+        "out_proj": ParamDef((d_in, d), ("tp", "fsdp"), fusable=True),
     }
 
 
@@ -542,7 +543,7 @@ def mamba_apply(cfg, sys, mi: MeshInfo, p, x):
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     xz = h @ p["in_proj"]
     y, _ = _mamba_core(cfg, mi, p, xz)
-    out = y @ p["out_proj"]
+    out = layers.matmul(y, p["out_proj"])
     return x + psum_tp_act(out, mi)
 
 
@@ -551,7 +552,7 @@ def mamba_prefill(cfg, sys, mi: MeshInfo, p, x):
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     xz = h @ p["in_proj"]
     y, (conv_s, h_s) = _mamba_core(cfg, mi, p, xz)
-    out = y @ p["out_proj"]
+    out = layers.matmul(y, p["out_proj"])
     return x + psum_tp(out, mi), {"conv": conv_s.astype(BF16), "h": h_s}
 
 
@@ -569,7 +570,7 @@ def mamba_decode(cfg, sys, mi: MeshInfo, p, x, state):
     y, (conv_s, h_s) = _mamba_core(cfg, mi, p, xz,
                                    conv_state=state["conv"],
                                    h_state=state["h"])
-    out = y @ p["out_proj"]
+    out = layers.matmul(y, p["out_proj"])
     return x + psum_tp(out, mi), {"conv": conv_s.astype(BF16), "h": h_s}
 
 
@@ -599,7 +600,7 @@ def rwkv_tm_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
         "decay_w2": ParamDef((lr, da), (None, "tp"), init_scale=0.1),
         "u": ParamDef((da,), ("tp",), init="zeros"),
         "ln_x": ParamDef((da,), ("tp",), init="ones"),
-        "w_o": ParamDef((da, d), ("tp", "fsdp")),
+        "w_o": ParamDef((da, d), ("tp", "fsdp"), fusable=True),
     }
 
 
@@ -716,7 +717,7 @@ def _rwkv_tm_core(cfg, mi, p, x, xprev_last=None, s0=None):
     out = out * hmask[None, None, :, None].astype(out.dtype)
     out = _group_norm_heads(out, p["ln_x"], cfg.norm_eps)
     out = out * g.astype(out.dtype)
-    y = out @ p["w_o"]
+    y = layers.matmul(out, p["w_o"])
     return psum_tp(y, mi), (x[:, -1], s_new)
 
 
@@ -756,7 +757,7 @@ def rwkv_cm_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
         "mu_k": ParamDef((d,), ("fsdp",), init="zeros"),
         "mu_r": ParamDef((d,), ("fsdp",), init="zeros"),
         "w_k": ParamDef((d, f), ("fsdp", "tp")),
-        "w_v": ParamDef((f, d), ("tp", "fsdp")),
+        "w_v": ParamDef((f, d), ("tp", "fsdp"), fusable=True),
         "w_r": ParamDef((d, d), ("fsdp", "tp")),
     }
 
@@ -768,7 +769,7 @@ def _rwkv_cm_core(cfg, mi, p, x, xprev_last=None):
     xk = x + dx * p["mu_k"]
     xr = x + dx * p["mu_r"]
     kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
-    kv = kk @ p["w_v"]
+    kv = layers.matmul(kk, p["w_v"])
     kv = jax.lax.psum_scatter(kv, "model", scatter_dimension=2,
                               tiled=True)                  # [B,S,D/tp]
     gate = jax.nn.sigmoid(xr @ p["w_r"])                   # [B,S,D/tp]

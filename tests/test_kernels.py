@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.pallas_interpret
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYP = True

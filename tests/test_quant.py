@@ -21,6 +21,8 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.quant import BLOCK
 
+pytestmark = pytest.mark.pallas_interpret
+
 # ---------------------------------------------------------------------------
 # kernel vs oracle (interpret mode)
 # ---------------------------------------------------------------------------
