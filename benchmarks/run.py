@@ -633,6 +633,90 @@ def bench_fused_smoke(rows):
     return result
 
 
+def bench_serve_smoke(rows):
+    """--smoke continuous-batching serve axis: the toy dense cell served
+    twice through the SAME jitted paged-KV steps -- once with continuous
+    admission (admit/retire every scheduler tick, chunked prefill), once
+    with the wait-for-full-batch static baseline -- on the identical
+    mixed-length workload. This is the repo's first wall-clock-timed
+    perf artifact: request throughput plus TTFT/TPOT/ITL percentiles
+    are measured, not modeled. Pins the acceptance invariants:
+
+      * continuous batching achieves STRICTLY higher request throughput
+        than static batching on the mixed-length workload;
+      * all timed metrics are present and positive (schema shared with
+        the CI gate via serve_results.validate);
+      * the paged KV pools are byte-accounted as a MemoryPlanner tenant
+        (kv_page_bytes_per_chip > 0 and == the analytic pool size).
+
+    Writes results/bench_smoke_serve.json (uploaded by CI next to the
+    other bench_smoke*.json artifacts)."""
+    from repro.configs.base import (ModelConfig, RunConfig, ShapeCell,
+                                    SystemConfig)
+    from repro.core.cache import cache_bytes_per_chip
+    from repro.core.engine import StepBundle
+    from repro.core.engine.serve import default_paged_kv
+    from repro.core.serve_schedule import PagedServeEngine, summarize
+    from repro.launch.mesh import make_mesh
+    import serve_results
+    import serve_workload
+
+    cfg = ModelConfig(name="smoke-dense", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256)
+    cell = ShapeCell("serve", "decode", 128, 8)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    run = RunConfig(model=cfg, shape=cell,
+                    system=SystemConfig(min_shard_size=8))
+    bundle = StepBundle(run, mesh)
+    params = bundle.init_all_params(seed=0)
+    kv = default_paged_kv(bundle, cell)
+
+    # planner-tenant accounting: pool bytes land in the totals
+    acct = cache_bytes_per_chip(bundle, kv=kv)
+    from repro.core.kv_cache import kv_page_bytes_per_chip
+    analytic = kv_page_bytes_per_chip(cfg, bundle.mi, bundle.model.plan,
+                                      bundle.model.n_groups, kv)
+    assert acct["kv_page_bytes_per_chip"] == analytic > 0
+
+    spec = serve_workload.WorkloadSpec(n_requests=32, seq_len=128,
+                                       gen_lo=2, gen_hi=48,
+                                       vocab_size=256, seed=0)
+    cont = PagedServeEngine(bundle, kv, chunk=32, policy="continuous")
+    stat = PagedServeEngine(bundle, kv, chunk=32, policy="static",
+                            share_steps_with=cont)
+    # warm the shared compile cache outside the timed region
+    warm = serve_workload.generate(serve_workload.WorkloadSpec(
+        n_requests=2, seq_len=128, gen_lo=2, gen_hi=2, vocab_size=256,
+        seed=7))
+    cont.serve(params, warm)
+
+    arms = {}
+    for name, eng in (("continuous", cont), ("static", stat)):
+        results, wall = eng.serve(params, serve_workload.generate(spec))
+        assert len(results) == spec.n_requests
+        arms[name] = summarize(results, wall)
+        rows.append((f"serve_smoke/{name}_rps", wall * 1e6,
+                     arms[name]["throughput_rps"]))
+        rows.append((f"serve_smoke/{name}_ttft_p50_ms", 0,
+                     arms[name]["ttft_s"]["p50"] * 1e3))
+        rows.append((f"serve_smoke/{name}_itl_p50_ms", 0,
+                     arms[name]["itl_s"]["p50"] * 1e3))
+    rows.append(("serve_smoke/continuous_vs_static_x", 0,
+                 arms["continuous"]["throughput_rps"]
+                 / arms["static"]["throughput_rps"]))
+
+    doc = serve_results.make_artifact(
+        spec.to_json(),
+        {"page_size": kv.page_size,
+         "pages_per_replica": kv.pages_per_replica,
+         "max_pages_per_seq": kv.max_pages_per_seq,
+         "kv_page_bytes_per_chip": acct["kv_page_bytes_per_chip"]},
+        arms)
+    serve_results.write(RESULTS / "bench_smoke_serve.json", doc)
+    return doc
+
+
 def _cell(arch, cell, mode, multi_pod=True, overrides=None):
     from repro.launch.dryrun import dryrun_cell
     # paper-table benches compare modes on the sequential schedule:
@@ -912,6 +996,7 @@ def main() -> None:
                 ("restart_smoke", bench_restart_smoke),
                 ("quant_smoke", bench_quant_smoke),
                 ("fused_smoke", bench_fused_smoke),
+                ("serve_smoke", bench_serve_smoke),
                 ("kernels", bench_kernels)]
                if args.smoke else BENCHES)
     RESULTS.mkdir(exist_ok=True)

@@ -1,0 +1,61 @@
+"""Serve-bench artifact schema + writer (the results half of the
+workload/results split -- ``serve_workload.py`` owns the workload).
+
+The artifact (``results/bench_smoke_serve.json``) is the repo's first
+TIMED perf artifact: every latency number in it is wall-clock measured
+on the machine that produced it, not derived from the roofline model.
+``validate()`` is shared by the bench itself and the CI gate so the
+schema can't silently rot.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+LATENCY_KEYS = ("ttft_s", "tpot_s", "itl_s")
+PCT_KEYS = ("mean", "p50", "p90", "p99")
+
+
+def make_artifact(workload: dict, kv: dict, arms: dict,
+                  extra: dict = None) -> dict:
+    """arms: {policy_name: summarize(...) dict} -- at least
+    'continuous' and 'static'."""
+    doc = {"smoke": True, "timed": True, "workload": workload, "kv": kv,
+           "arms": arms}
+    c, s = arms["continuous"], arms["static"]
+    doc["continuous_vs_static_rps"] = (
+        c["throughput_rps"] / s["throughput_rps"]
+        if s["throughput_rps"] else float("inf"))
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def validate(doc: dict) -> None:
+    """Invariants the acceptance gates rely on; raises AssertionError."""
+    assert doc.get("timed"), "serve artifact must be wall-clock timed"
+    arms = doc["arms"]
+    for policy in ("continuous", "static"):
+        a = arms[policy]
+        assert a["requests"] > 0, policy
+        assert a["wall_s"] > 0, policy
+        assert a["throughput_rps"] > 0, policy
+        assert a["throughput_tok_s"] > 0, policy
+        for lk in LATENCY_KEYS:
+            for pk in PCT_KEYS:
+                v = a[lk][pk]
+                assert v >= 0, (policy, lk, pk, v)
+        # every request produced at least one token -> TTFT measured
+        assert a["ttft_s"]["mean"] > 0, policy
+        assert a["itl_s"]["p50"] > 0, policy
+    # the headline: continuous batching strictly beats wait-for-full-batch
+    assert (arms["continuous"]["throughput_rps"]
+            > arms["static"]["throughput_rps"]), (
+        arms["continuous"]["throughput_rps"],
+        arms["static"]["throughput_rps"])
+
+
+def write(path: Path, doc: dict) -> None:
+    validate(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=float)

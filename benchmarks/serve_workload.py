@@ -1,0 +1,66 @@
+"""Synthetic serve workloads (the workload half of the serve bench's
+workload/results split -- ``serve_results.py`` owns the artifact).
+
+A workload is a seeded, reproducible list of requests with MIXED prompt
+AND generation lengths: continuous batching's advantage over
+wait-for-full-batch admission only shows when requests FINISH at
+different times -- a static wave idles every slot whose sequence
+completed until the slowest one drains, while continuous admission
+backfills those slots immediately. Equal lengths would hide that
+entirely (every slot finishes together and static never idles), so the
+generator spreads prompts bimodally and generation lengths uniformly,
+then shuffles. Deterministic per (spec, seed): both scheduler policies
+replay the identical request list.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    n_requests: int = 24
+    seq_len: int = 128          # hard cap on prompt + generation
+    gen_lo: int = 2             # max_new_tokens drawn from [gen_lo, gen_hi]
+    gen_hi: int = 16
+    min_prompt: int = 4
+    vocab_size: int = 256
+    seed: int = 0
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+def generate(spec: WorkloadSpec) -> List:
+    """List of ``core.serve_schedule.Request`` for the spec."""
+    from repro.core.serve_schedule import Request
+    rng = np.random.default_rng(spec.seed)
+    hi = spec.seq_len - spec.gen_hi
+    if hi < spec.min_prompt:
+        raise ValueError(f"seq_len {spec.seq_len} too small for gen_hi "
+                         f"{spec.gen_hi} + min_prompt {spec.min_prompt}")
+    # half short, half long prompts, shuffled
+    short = rng.integers(spec.min_prompt, max(spec.min_prompt + 1, hi // 4),
+                         size=spec.n_requests // 2)
+    long_ = rng.integers(max(1, 3 * hi // 4), hi, endpoint=True,
+                         size=spec.n_requests - len(short))
+    plens = np.concatenate([short, long_])
+    rng.shuffle(plens)
+    # heavy-tailed generation lengths (the realistic shape): 3/4 short,
+    # 1/4 near gen_hi -- a static wave drains at the pace of its slowest
+    # member, which is exactly what the tail stresses
+    g_short = rng.integers(spec.gen_lo, max(spec.gen_lo + 1, spec.gen_hi // 6),
+                           size=3 * spec.n_requests // 4)
+    g_long = rng.integers(max(1, 3 * spec.gen_hi // 4), spec.gen_hi,
+                          endpoint=True,
+                          size=spec.n_requests - len(g_short))
+    gens = np.concatenate([g_short, g_long])
+    rng.shuffle(gens)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, spec.vocab_size,
+                                        (int(p),)).astype(np.int32),
+                    max_new_tokens=int(g))
+            for i, (p, g) in enumerate(zip(plens, gens))]

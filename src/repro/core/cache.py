@@ -93,7 +93,7 @@ def stage1_dcn_gather_bytes(bundle) -> Dict[str, float]:
             "by_group": by_group}
 
 
-def cache_bytes_per_chip(bundle) -> Dict[str, float]:
+def cache_bytes_per_chip(bundle, kv=None) -> Dict[str, float]:
     """Analytic size of the FCDP cache tier, per chip, split by
     resolved strategy group.
 
@@ -118,6 +118,11 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
     storage-level grads + the last microbatch's pending stage-1 grads)
     when stream 3 is live -- all HBM-resident, so the planner counts
     them against the tau budget.
+
+    kv (a ``core.kv_cache.PagedKVConfig`` or None) adds the paged
+    KV-cache pools as a fourth tenant: ``kv_page_bytes_per_chip`` is
+    always present (0.0 without a paged serve path) so the dryrun /
+    roofline schema is stable across train and serve cells.
     """
     mi = bundle.mi
     strategy = bundle.strategy
@@ -158,9 +163,17 @@ def cache_bytes_per_chip(bundle) -> Dict[str, float]:
     for g, b in dcn["by_group"].items():
         if g in by_group:
             by_group[g]["stage1_dcn_gather_bytes_per_chip"] = b
+    kv_bytes = 0.0
+    if kv is not None:
+        from repro.core.kv_cache import kv_page_bytes_per_chip
+        model = bundle.model
+        kv_bytes = kv_page_bytes_per_chip(
+            bundle.run.model, mi, getattr(model, "plan", ()),
+            getattr(model, "n_groups", 0), kv)
     host = sum(gb["cached_bytes_per_chip"] for gb in by_group.values()
                if gb["placement"] == "host")
     return {"host_cache_bytes_per_chip": host,
+            "kv_page_bytes_per_chip": kv_bytes,
             "param_compress": bundle.run.system.param_compress,
             "stage1_dcn_gather_bytes_per_chip": dcn[
                 "stage1_dcn_gather_bytes_per_chip"],
@@ -201,6 +214,11 @@ class CachePlan:
     # pipeline (stream 3); demoted FIRST -- dropping it frees the
     # step-boundary carry buffers and costs only epilogue overlap
     cross_step: bool = False
+    # paged-KV pool capacity (pages per replica) the winning serve
+    # configuration keeps -- None for train plans; demoted LAST on the
+    # serve path (shrinking it bounds batch concurrency, a throughput
+    # property, never correctness)
+    kv_pages: Optional[int] = None
 
 
 class MemoryPlanner:
@@ -296,3 +314,82 @@ class MemoryPlanner:
         last = iters[-1]
         return CachePlan(0.0, False, last["peak_bytes"], last["host_bytes"],
                          iters, activation_policy=last["activation_policy"])
+
+    # -- serve planning (paged-KV tenant; core/kv_cache.py) ------------------
+    def _peak_serve(self, bundle, kv) -> int:
+        step = bundle.make_paged_decode_step(kv)
+        c = step.lower(*bundle.paged_decode_input_sds(kv)).compile()
+        m = c.memory_analysis()
+        return (m.argument_size_in_bytes + m.temp_size_in_bytes
+                + m.output_size_in_bytes - m.alias_size_in_bytes)
+
+    def _attempt_serve(self, run, mesh, sysc, kv, iters) -> Dict:
+        from repro.core.engine import StepBundle
+        bundle = StepBundle(run.replace(system=sysc), mesh)
+        peak = self._peak_serve(bundle, kv)
+        acct = cache_bytes_per_chip(bundle, kv=kv)
+        it = {"device_fraction": sysc.device_cache_fraction,
+              "activation_policy": sysc.activation_policy,
+              "prefetch_depth": acct["prefetch_depth"],
+              "prefetch_buffer_bytes": acct[
+                  "prefetch_buffer_bytes_per_chip"],
+              "kv_pages": kv.pages_per_replica,
+              "kv_page_bytes": acct["kv_page_bytes_per_chip"],
+              "peak_bytes": peak,
+              "host_bytes": acct["host_cache_bytes_per_chip"],
+              "param_compress": acct["param_compress"],
+              "by_group": acct["by_group"]}
+        iters.append(it)
+        return it
+
+    def plan_serve(self, run, mesh, kv,
+                   fractions=(1.0, 0.5, 0.25, 0.0)) -> CachePlan:
+        """Tau search for the paged serve path (decode cell). Tenants
+        demote in fixed order, documented in ARCHITECTURE.md §Serving:
+
+          1. prefetch depth k -> 0 (each step frees one in-flight
+             stage-1 ring buffer, costs only overlap; resolves to 0
+             already under the serve_frozen fcdp layout),
+          2. device-cache fraction high -> low (weights fall back to
+             the host cache / regather tier),
+          3. paged-KV pool capacity, halved until one max-length
+             sequence + the scratch page still fit. Capacity bounds
+             how many sequences decode concurrently -- a throughput
+             knob -- so it is the last tenant to shrink and never
+             affects per-request numerics.
+
+        The cross-step carry and activation-remat stages of the train
+        search do not apply (serving runs no optimizer/backward).
+        """
+        from repro.core.engine import StepBundle
+        probe = StepBundle(run, mesh)
+        k0 = probe.strategy.prefetch_depth(run.system, probe.mi)
+        attempts = [(fractions[0], d) for d in range(k0, 0, -1)] \
+            + [(f, 0) for f in fractions]
+        iters: List[Dict] = []
+        for frac, depth in attempts:
+            sysc = run.system.replace(device_cache_fraction=frac,
+                                      prefetch_depth=depth)
+            it = self._attempt_serve(run, mesh, sysc, kv, iters)
+            if self._fits(it):
+                return CachePlan(frac, True, it["peak_bytes"],
+                                 it["host_bytes"], iters,
+                                 prefetch_depth=it["prefetch_depth"],
+                                 kv_pages=kv.pages_per_replica)
+        floor = 1 + kv.max_pages_per_seq
+        cur = kv
+        sysc = run.system.replace(device_cache_fraction=fractions[-1],
+                                  prefetch_depth=0)
+        while cur.pages_per_replica > floor:
+            cur = dataclasses.replace(
+                cur, pages_per_replica=max(
+                    floor, (cur.pages_per_replica + 1) // 2))
+            it = self._attempt_serve(run, mesh, sysc, cur, iters)
+            if self._fits(it):
+                return CachePlan(fractions[-1], True, it["peak_bytes"],
+                                 it["host_bytes"], iters,
+                                 kv_pages=cur.pages_per_replica)
+        last = iters[-1]
+        return CachePlan(0.0, False, last["peak_bytes"],
+                         last["host_bytes"], iters,
+                         kv_pages=cur.pages_per_replica)

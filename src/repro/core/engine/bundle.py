@@ -203,6 +203,18 @@ class StepBundle:
         from repro.core.engine.serve import build_decode_step
         return build_decode_step(self, seq_sharded=seq_sharded)
 
+    def make_paged_decode_step(self, kv):
+        from repro.core.engine.serve import build_paged_decode_step
+        return build_paged_decode_step(self, kv)
+
+    def make_prefill_chunk_step(self, kv):
+        from repro.core.engine.serve import build_prefill_chunk_step
+        return build_prefill_chunk_step(self, kv)
+
+    def make_greedy_pick(self):
+        from repro.core.engine.serve import build_greedy_pick
+        return build_greedy_pick(self)
+
     # -- dry-run input ShapeDtypeStructs ------------------------------------
     def train_input_sds(self):
         """ShapeDtypeStructs for lowering the train step (no allocation)."""
@@ -303,3 +315,41 @@ class StepBundle:
             sharding=NamedSharding(self.mesh, bspec))
         state = self.state_sds(cell, seq_sharded=seq_sharded)
         return params_sds, tok, state
+
+    # -- paged serve state (continuous batching; core/kv_cache.py) -----------
+    def init_paged_state(self, kv):
+        """Materialize the paged KV pools placed per paged_state_specs."""
+        from repro.core.engine.serve import (paged_pages_global,
+                                             paged_state_specs)
+        cell = self.run.shape
+        n_pages = paged_pages_global(self, cell, kv)
+        specs = paged_state_specs(self, cell, kv)
+        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+        fn = jax.jit(lambda: self.model.init_paged_state(
+            n_pages, kv.page_size), out_shardings=shardings)
+        return fn()
+
+    def paged_state_sds(self, kv):
+        from repro.core.engine.serve import (abstract_paged_state,
+                                             paged_state_specs)
+        cell = self.run.shape
+        abstract = abstract_paged_state(self, cell, kv)
+        specs = paged_state_specs(self, cell, kv)
+
+        def glue(a, s):
+            return jax.ShapeDtypeStruct(
+                a.shape, a.dtype, sharding=NamedSharding(self.mesh, s))
+        return jax.tree.map(glue, abstract, specs)
+
+    def paged_decode_input_sds(self, kv):
+        """Inputs for lowering one paged decode step."""
+        cell = self.run.shape
+        params_sds = self._leaf_sds(range(len(self.def_leaves)))
+        _, bspec = self._serve_batch_dims(cell)
+        sh = NamedSharding(self.mesh, bspec)
+        B = cell.global_batch
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=sh)
+        table = jax.ShapeDtypeStruct((B, kv.max_pages_per_seq), jnp.int32,
+                                     sharding=sh)
+        lengths = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=sh)
+        return params_sds, tok, table, lengths, self.paged_state_sds(kv)

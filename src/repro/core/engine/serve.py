@@ -98,11 +98,15 @@ def state_specs(bundle, cell: ShapeCell, seq_sharded: bool):
       - kv-cache seq dim over 'data' when seq_sharded (long-context)
       - TP-owned dims ('model'): rwkv heads, mamba d_inner channels
     """
-    from repro.compat import flatten_with_path
-    mi = bundle.mi
     _, bspec = serve_batch_dims(bundle, cell, seq_sharded)
     batch_axes = bspec[0] if len(bspec) else None
     example = abstract_state(bundle, cell, seq_sharded)
+    return _specs_for_state(bundle, example, batch_axes, seq_sharded)
+
+
+def _specs_for_state(bundle, example, batch_axes, seq_sharded: bool):
+    from repro.compat import flatten_with_path
+    mi = bundle.mi
     paths, treedef = flatten_with_path(example)
     specs = []
     for path, arr in paths:
@@ -139,3 +143,142 @@ def abstract_state(bundle, cell: ShapeCell, seq_sharded: bool):
         lambda: bundle.model.init_decode_state(
             cell.global_batch, cell.seq_len, seq_sharded=seq_sharded,
             **kw))
+
+
+# ===========================================================================
+# Paged-KV serve path (continuous batching; see core/kv_cache.py)
+# ===========================================================================
+
+def check_paged_plan(model) -> None:
+    """The paged path is gated to attention-only mixer stacks: MoE
+    dispatch couples batch rows through capacity dropping (breaking
+    per-request bit-identity) and the recurrent mixers (mamba/rwkv)
+    have no paged state."""
+    bad = sorted({k for kinds in model.plan for k in kinds
+                  if k not in ("attn", "mlp")})
+    if bad:
+        raise ValueError(
+            f"paged serving supports (attn, mlp) stacks only, plan has "
+            f"{bad}; use the single-request contiguous path instead")
+
+
+def paged_replicas(bundle, cell: ShapeCell) -> int:
+    """Data replicas the paged pool's page dim is split over (1 when
+    the batch falls back to replicated P())."""
+    b_local, _ = serve_batch_dims(bundle, cell)
+    return cell.global_batch // b_local
+
+
+def paged_pages_global(bundle, cell: ShapeCell, kv) -> int:
+    return kv.pages_per_replica * paged_replicas(bundle, cell)
+
+
+def default_paged_kv(bundle, cell: ShapeCell):
+    """A pool sized so every batch slot can hold one max-length
+    (cell.seq_len) sequence -- the capacity-neutral default matching
+    the contiguous cache's footprint, plus the scratch page."""
+    from repro.core.kv_cache import PagedKVConfig
+    ps = 16 if cell.seq_len % 16 == 0 else 8
+    mpps = -(-cell.seq_len // ps)
+    slots = cell.global_batch // paged_replicas(bundle, cell)
+    return PagedKVConfig(page_size=ps,
+                         pages_per_replica=1 + slots * mpps,
+                         max_pages_per_seq=mpps)
+
+
+def paged_state_specs(bundle, cell: ShapeCell, kv):
+    """Specs for the paged pools: page dim over the batch fsdp axes,
+    kv-slot dim over 'model' -- the same positional rules as the
+    contiguous state (the paged leaves are named k/v under attn too)."""
+    _, bspec = serve_batch_dims(bundle, cell)
+    batch_axes = bspec[0] if len(bspec) else None
+    example = abstract_paged_state(bundle, cell, kv)
+    return _specs_for_state(bundle, example, batch_axes,
+                            seq_sharded=False)
+
+
+def abstract_paged_state(bundle, cell: ShapeCell, kv):
+    n_pages = paged_pages_global(bundle, cell, kv)
+    return jax.eval_shape(
+        lambda: bundle.model.init_paged_state(n_pages, kv.page_size))
+
+
+def build_paged_decode_step(bundle, kv):
+    """One continuous-batching decode step: (params, tok [B,1], table
+    [B,max_pages], lengths [B], pools) -> (logits [B,V], pools)."""
+    run, mesh = bundle.run, bundle.mesh
+    model = bundle.model
+    check_paged_plan(model)
+    cell = run.shape
+    _, bspec = serve_batch_dims(bundle, cell)
+
+    def body(params_leaves, tok, table, lengths, state):
+        params = jax.tree.unflatten(bundle.treedef, params_leaves)
+        return model.paged_decode_fn(params, tok, state, table, lengths)
+
+    st_specs = paged_state_specs(bundle, cell, kv)
+    logits_spec = P(bspec[0] if len(bspec) else None, "model")
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(bundle.leaf_specs, bspec, bspec, bspec,
+                             st_specs),
+                   out_specs=(logits_spec, st_specs),
+                   check_vma=_SERVE_CHECK)
+    return jax.jit(fn, donate_argnums=(4,))
+
+
+def build_prefill_chunk_step(bundle, kv):
+    """One chunked-prefill step: (params, ids [B,C], table, pos0 [B],
+    last_idx [B], pools) -> (last-prompt-token logits [B,V], pools).
+    C is whatever the caller feeds (jit caches per chunk size); rows not
+    prefilling this call must carry a scratch (all-zero) table row."""
+    run, mesh = bundle.run, bundle.mesh
+    model = bundle.model
+    check_paged_plan(model)
+    cell = run.shape
+    _, bspec = serve_batch_dims(bundle, cell)
+
+    def body(params_leaves, ids, table, pos0, last_idx, state):
+        params = jax.tree.unflatten(bundle.treedef, params_leaves)
+        return model.paged_prefill_fn(params, ids, state, table, pos0,
+                                      last_idx)
+
+    st_specs = paged_state_specs(bundle, cell, kv)
+    logits_spec = P(bspec[0] if len(bspec) else None, "model")
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(bundle.leaf_specs, bspec, bspec, bspec,
+                             bspec, st_specs),
+                   out_specs=(logits_spec, st_specs),
+                   check_vma=_SERVE_CHECK)
+    return jax.jit(fn, donate_argnums=(5,))
+
+
+def build_greedy_pick(bundle):
+    """Greedy sampler, jitted ONCE for the whole decode loop: each TP
+    rank reduces its local vocab shard to one (value, index) candidate
+    and only the tp candidates cross the wire -- never the full [B, V]
+    logits. Tie-breaking matches jnp.argmax over the concatenated
+    vocab (lowest global index wins)."""
+    from repro.compat import all_gather_invariant
+    mesh = bundle.mesh
+    cell = bundle.run.shape
+    mi = bundle.mi
+    _, bspec = serve_batch_dims(bundle, cell)
+
+    def body(logits):                       # [b_local, V_local]
+        v_loc = jnp.max(logits, axis=-1)
+        i_loc = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if mi.tp > 1:
+            i_loc = i_loc + jax.lax.axis_index("model") * logits.shape[-1]
+            vs = all_gather_invariant(v_loc[None], "model", axis=0,
+                                      tiled=True)     # [tp, b_local]
+            ix = all_gather_invariant(i_loc[None], "model", axis=0,
+                                      tiled=True)
+            r = jnp.argmax(vs, axis=0)                # lowest rank on ties
+            return jnp.take_along_axis(ix, r[None, :], axis=0)[0]
+        return i_loc
+
+    logits_spec = P(bspec[0] if len(bspec) else None, "model")
+    out_spec = P(bspec[0] if len(bspec) else None)
+    fn = shard_map(body, mesh=mesh, in_specs=(logits_spec,),
+                   out_specs=out_spec, check_vma=_SERVE_CHECK)
+    return jax.jit(fn)

@@ -85,7 +85,15 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     # stage 1 (serve_frozen fcdp layouts) report ~zero pod-AG bytes and
     # get no credit regardless.
     from repro.core.cache import cache_bytes_per_chip
-    acct = cache_bytes_per_chip(bundle)
+    kv = None
+    if cell.kind == "decode":
+        from repro.core.engine.serve import check_paged_plan, default_paged_kv
+        try:
+            check_paged_plan(bundle.model)
+            kv = default_paged_kv(bundle, cell)
+        except ValueError:
+            kv = None       # paged serving not supported for this plan
+    acct = cache_bytes_per_chip(bundle, kv=kv)
     depth_live = acct["prefetch_depth"]
     seq_sharded = (cell.name == "long_500k")
     if cell.kind == "train":
@@ -143,6 +151,7 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
         "cross_step_buffer_bytes_per_chip":
             acct["cross_step_buffer_bytes_per_chip"],
         "param_compress": acct["param_compress"],
+        "kv_page_bytes_per_chip": acct["kv_page_bytes_per_chip"],
         "fused_matmul": fused_matmul,
         "fused_n_leaves": fused_credit["n_fused_leaves"],
         "fused_overlap_credit_s": fused_credit["credit_s"],

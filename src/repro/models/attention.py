@@ -67,7 +67,12 @@ def chunked_causal_attention(q, k, v, *, q_chunk: int = 1024,
 
     q: [B, Sq, H, hd]; k, v: [B, Skv, H, hd] (kv already head-expanded).
     q_offset: absolute position of q[0] relative to k[0] (for prefill
-    continuation); causal masking uses absolute positions.
+    continuation); causal masking uses absolute positions. May be a
+    scalar (all rows share one offset -- the contiguous-cache path) or a
+    [B] array (per-row offsets -- the paged continuous-batching path,
+    where every sequence in the batch sits at its own position). The
+    scalar path lowers exactly as before, so single-request serving is
+    bit-identical.
     """
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
@@ -90,9 +95,15 @@ def chunked_causal_attention(q, k, v, *, q_chunk: int = 1024,
 
     kv_pos = (jnp.arange(nk * kv_chunk)).reshape(nk, kv_chunk)
 
+    q_off = jnp.asarray(q_offset)
+
     def q_block(qi_qc):
         qi, qc = qi_qc
-        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        rel = qi * q_chunk + jnp.arange(q_chunk)
+        # [B, qc] when q_offset is per-row, [1, qc] for the scalar path
+        # (identical broadcast shape to the original scalar code)
+        q_pos = (q_off[:, None] + rel[None, :] if q_off.ndim == 1
+                 else (q_off + rel)[None, :])
 
         def kv_body(carry, inp):
             m, l, acc = carry
@@ -101,7 +112,7 @@ def chunked_causal_attention(q, k, v, *, q_chunk: int = 1024,
                            kc.astype(jnp.float32)) * scale
             mask = kpos[None, None, None, :] < Skv  # kv padding
             if causal:
-                mask = mask & (kpos[None, None, None, :] <= q_pos[None, None, :, None])
+                mask = mask & (kpos[None, None, None, :] <= q_pos[:, None, :, None])
             s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -138,12 +149,22 @@ def _lora_term(x, lora, name, scale):
 def attention_block(x, wq, wk, wv, wo, bq, bk, bv, cfg, mi: MeshInfo,
                     positions, attn_impl: str = "jnp",
                     kv_cache: Optional[Tuple] = None,
+                    paged_kv: Optional[Tuple] = None,
                     q_norm=None, k_norm=None, lora=None,
                     lora_alpha: float = 2.0, causal: bool = True):
     """Full attention sublayer on local shards.
 
     x: [B, S, D]. wq: [D, Hpad_local*hd]; wk/wv: [D, KVH*hd] (replicated
     over model); wo: [Hpad_local*hd, D]. Returns ([B,S,D], new_kv).
+
+    paged_kv: (pool_k, pool_v, page_table) -- the paged KV cache path
+    for continuous batching. pool_k/pool_v: [n_pages, page_size, span,
+    hd] (this rank's kv-head span, this replica's pages); page_table:
+    [B, max_pages] LOCAL page ids, where page 0 is the reserved scratch
+    page rows of inactive batch slots point at. ``positions`` must then
+    be the per-row absolute positions [B, S] (contiguous per row).
+    Returns (pool_k, pool_v) as new_kv. Mutually exclusive with
+    kv_cache.
     """
     B, S, D = x.shape
     hd = cfg.resolved_head_dim()
@@ -185,7 +206,55 @@ def attention_block(x, wq, wk, wv, wo, bq, bk, bv, cfg, mi: MeshInfo,
     n_rep = padded_heads // n_kv
 
     new_cache = None
-    if kv_cache is not None:
+    if paged_kv is not None:
+        pool_k, pool_v, table = paged_kv
+        span = pool_k.shape[2]
+        if span < n_kv or mi.tp > 1:
+            rank_start = (jax.lax.axis_index("model") * h_local
+                          if mi.tp > 1 else 0)
+            kv_first = jnp.minimum(rank_start // n_rep, n_kv - span)
+            k_w = jax.lax.dynamic_slice_in_dim(k, kv_first, span, axis=2)
+            v_w = jax.lax.dynamic_slice_in_dim(v, kv_first, span, axis=2)
+            off = rank_start - kv_first * n_rep
+        else:
+            k_w, v_w, off = k, v, 0
+        n_pages, page_size = pool_k.shape[0], pool_k.shape[1]
+        flat_k = pool_k.reshape(n_pages * page_size, span, hd)
+        flat_v = pool_v.reshape(n_pages * page_size, span, hd)
+        # absolute position -> flat pool slot through the page table.
+        # Positions past the table width (chunk-padding overshoot) are
+        # redirected to the scratch page: never read (the causal mask
+        # stops at each row's own position), so duplicate writes there
+        # may land in any order.
+        page_idx = positions // page_size
+        in_range = page_idx < table.shape[1]
+        pageof = jnp.take_along_axis(
+            table, jnp.minimum(page_idx, table.shape[1] - 1), axis=1)
+        pageof = jnp.where(in_range, pageof, 0)
+        slot = pageof * page_size + positions % page_size          # [B, S]
+        flat_idx = slot.reshape(-1)
+        flat_k = flat_k.at[flat_idx].set(
+            k_w.astype(flat_k.dtype).reshape(B * S, span, hd))
+        flat_v = flat_v.at[flat_idx].set(
+            v_w.astype(flat_v.dtype).reshape(B * S, span, hd))
+        new_cache = (flat_k.reshape(pool_k.shape),
+                     flat_v.reshape(pool_v.shape))
+        # gather every page a row can address into one contiguous view
+        # [B, max_pages*page_size, span, hd]; rows beyond a sequence's
+        # written length come from scratch/stale pages and are masked by
+        # the per-row causal offset below (finite garbage -> exact zero
+        # contribution after the NEG_INF mask, see chunked attention).
+        gather_idx = (table[..., None] * page_size
+                      + jnp.arange(page_size)[None, None, :]
+                      ).reshape(B, table.shape[1] * page_size)
+        k_gat = flat_k[gather_idx]
+        v_gat = flat_v[gather_idx]
+        q_offset = positions[:, 0]
+        k_exp = jax.lax.dynamic_slice_in_dim(
+            _expand_kv(k_gat, n_rep), off, h_local, axis=2)
+        v_exp = jax.lax.dynamic_slice_in_dim(
+            _expand_kv(v_gat, n_rep), off, h_local, axis=2)
+    elif kv_cache is not None:
         # TP-sharded KV cache: each rank stores only the kv_span heads its
         # q heads read (cache local shape [B, S_max, span, hd]); fresh K/V
         # are sliced before the write so the full cache never materializes.
@@ -214,7 +283,8 @@ def attention_block(x, wq, wk, wv, wo, bq, bk, bv, cfg, mi: MeshInfo,
         q_offset = 0
         k_exp, v_exp = slice_expand_kv(k, v, h_local, n_rep, mi)
 
-    if attn_impl in ("pallas", "pallas_interpret") and causal and kv_cache is None:
+    if (attn_impl in ("pallas", "pallas_interpret") and causal
+            and kv_cache is None and paged_kv is None):
         from repro.kernels import ops as kops
         out = kops.flash_attention(
             q, k_exp, v_exp, causal=True,

@@ -189,3 +189,45 @@ class LM:
                      self.cfg.norm_eps)
         logits = x @ self._head_weights(params)
         return logits[:, 0], new_state
+
+    # -- paged serving (continuous batching) ---------------------------------
+    def init_paged_state(self, n_pages: int, page_size: int):
+        """Paged KV pools, stacked like the contiguous decode state."""
+        return stk.init_paged_group_state(self.cfg, self.plan, self.mi,
+                                          n_pages, page_size, self.n_groups)
+
+    def paged_decode_fn(self, params, tok, state, table, lengths):
+        """One decode step over the paged cache. tok: [B_local, 1];
+        table: [B_local, max_pages] local page ids; lengths: [B_local]
+        current written length per row (the incoming token's absolute
+        position). Returns (logits [B_local, V_local], new_state)."""
+        x = self._embed(params, tok)
+        ctx = {"paged": True, "decode": True,
+               "positions": lengths[:, None], "page_table": table}
+        x, new_state, _ = self._run_blocks(params, x, ctx, state)
+        x = rms_norm(x, gather_param(params["final_norm"],
+                                     self._plans["final_norm"]),
+                     self.cfg.norm_eps)
+        logits = x @ self._head_weights(params)
+        return logits[:, 0], new_state
+
+    def paged_prefill_fn(self, params, ids, state, table, pos0, last_idx):
+        """One prefill CHUNK over the paged cache. ids: [B_local, C]
+        (rows not prefilling this call carry padding and a scratch
+        table row); pos0: [B_local] absolute position of each row's
+        chunk start; last_idx: [B_local] position within the chunk of
+        the row's last prompt token (logits are taken there -- only
+        meaningful for rows finishing their prompt this chunk).
+        Returns (logits [B_local, V_local], new_state)."""
+        S = ids.shape[1]
+        x = self._embed(params, ids)
+        positions = pos0[:, None] + jnp.arange(S, dtype=pos0.dtype)[None, :]
+        ctx = {"paged": True, "prefill_chunk": True,
+               "positions": positions, "page_table": table}
+        x, new_state, _ = self._run_blocks(params, x, ctx, state)
+        x = rms_norm(x, gather_param(params["final_norm"],
+                                     self._plans["final_norm"]),
+                     self.cfg.norm_eps)
+        x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+        logits = x_last @ self._head_weights(params)
+        return logits[:, 0], new_state

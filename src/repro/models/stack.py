@@ -81,6 +81,12 @@ def apply_sublayer(kind: str, cfg, sys, mi, p, x, ctx: Dict[str, Any],
                    state=None):
     """Dispatch one sublayer. Returns (x, new_state, aux)."""
     if kind == "attn":
+        if ctx.get("paged"):
+            x, new_state = sl.attn_paged(
+                cfg, sys, mi, p, x, state, ctx["positions"],
+                ctx["page_table"],
+                prefill=bool(ctx.get("prefill_chunk")))
+            return x, new_state, 0.0
         if ctx.get("decode"):
             x, new_state = sl.attn_decode(
                 cfg, sys, mi, p, x, state,
@@ -165,6 +171,29 @@ def init_group_state(cfg, plan, mi: MeshInfo, batch_local: int,
         if pos:
             out[f"pos{i}"] = pos
     # stack over groups
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), out)
+
+
+def init_paged_group_state(cfg, plan, mi: MeshInfo, n_pages: int,
+                           page_size: int, n_groups: int):
+    """Paged decode state for one group, stacked over n_groups. The
+    paged serve path shares one page table across all layers, so the
+    only per-layer state is the attention KV pool itself; any other
+    stateful mixer in the plan has no paged equivalent."""
+    out: Dict[str, Any] = {}
+    for i, kinds in enumerate(plan):
+        pos: Dict[str, Any] = {}
+        for kind in kinds:
+            if kind == "attn":
+                pos[kind] = sl.attn_init_paged_state(cfg, mi, n_pages,
+                                                     page_size)
+            elif kind in STATEFUL_KINDS:
+                raise ValueError(
+                    "paged serving supports attention-only stacks; "
+                    f"plan position {i} has stateful kind {kind!r}")
+        if pos:
+            out[f"pos{i}"] = pos
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), out)
 

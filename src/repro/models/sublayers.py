@@ -101,6 +101,44 @@ def attn_init_state(cfg, mi: MeshInfo, batch: int, max_len: int,
             "idx": jnp.zeros((), jnp.int32)}
 
 
+def attn_init_paged_state(cfg, mi: MeshInfo, n_pages: int, page_size: int):
+    """Paged KV pool with GLOBAL logical shape: [n_pages, page_size,
+    tp*span, hd]. The page dim is sharded over the batch's fsdp axes
+    (per-replica sub-pools -- each data replica owns only its own
+    sequences' pages), the slot dim over 'model' exactly like the
+    contiguous cache. Page 0 of every replica is the reserved scratch
+    page (see core/kv_cache.py)."""
+    from repro.models.attention import kv_span
+    hd = cfg.resolved_head_dim()
+    n_kv = cfg.num_kv_heads
+    hp = pad_heads(cfg.num_heads, mi.tp)
+    h_local = hp // mi.tp
+    n_rep = hp // n_kv
+    span = kv_span(h_local, n_rep, n_kv)
+    shape = (n_pages, page_size, mi.tp * span, hd)
+    return {"k": jnp.zeros(shape, BF16), "v": jnp.zeros(shape, BF16)}
+
+
+def attn_paged(cfg, sys, mi: MeshInfo, p, x, state, positions, table,
+               prefill: bool = False):
+    """Attention over the paged KV cache (continuous batching): one
+    decode token (x: [B,1,D]) or one prefill chunk (x: [B,C,D]) per
+    call. positions: [B,S] per-row absolute positions; table: [B,
+    max_pages] local page ids. Mirrors attn_apply (prefill) /
+    attn_decode (decode) op-for-op so per-request numerics are
+    bit-identical to the single-request contiguous-cache path."""
+    from repro.models.common import tp_region_in
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if prefill:
+        h = tp_region_in(h, mi)
+    y, (pk, pv) = attn_mod.attention_block(
+        h, p["wq"], p["wk"], p["wv"], p["wo"],
+        p.get("bq"), p.get("bk"), p.get("bv"), cfg, mi, positions,
+        paged_kv=(state["k"], state["v"], table),
+        q_norm=p.get("q_norm"), k_norm=p.get("k_norm"))
+    return x + y, {"k": pk, "v": pv}
+
+
 def attn_decode(cfg, sys, mi: MeshInfo, p, x, state, seq_sharded: bool = False):
     """One-token decode. x: [B,1,D]."""
     pos = state["idx"][None, None]  # [1,1] absolute position

@@ -1,0 +1,246 @@
+"""Continuous-batching serve engine + paged-KV tests.
+
+Covers: serve_batch_dims branches, the PagedKVConfig/PageAllocator
+invariants, the paged-plan gate, per-request bit-identity of the paged
+scheduler path against the single-request contiguous path, policy
+determinism (continuous vs static emit identical tokens), the KV-page
+tenant in cache_bytes_per_chip, and plan_serve's documented demotion
+order (prefetch depth -> device fraction -> KV pool halving)."""
+import types
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeCell, SystemConfig
+from repro.core.engine import StepBundle
+from repro.core.kv_cache import (SCRATCH_PAGE, PageAllocator, PagedKVConfig,
+                                 kv_page_bytes_per_chip)
+from repro.core.serve_schedule import PagedServeEngine, Request
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=4, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+DEC_CELL = ShapeCell("t", "decode", 128, 8)
+
+
+def _bundle(mesh, cell=DEC_CELL):
+    run = RunConfig(model=DENSE, shape=cell,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+    return StepBundle(run, mesh)
+
+
+@pytest.fixture(scope="module")
+def served(mesh3):
+    b = _bundle(mesh3)
+    return b, b.init_all_params(seed=0)
+
+
+# -- serve_batch_dims --------------------------------------------------------
+
+def test_serve_batch_dims_seq_sharded(mesh3):
+    """When the sequence dim owns 'data' (long-context), the batch may
+    only shard over the remaining fsdp axes."""
+    from repro.core.engine.serve import serve_batch_dims
+    b = _bundle(mesh3)
+    # default: batch over all fsdp axes (data, pod) -> degree 4
+    b_local, spec = serve_batch_dims(b, DEC_CELL)
+    assert (b_local, spec) == (2, P(("data", "pod")))
+    # seq_sharded: 'data' is spoken for, batch keeps only 'pod'
+    b_local, spec = serve_batch_dims(b, DEC_CELL, seq_sharded=True)
+    assert (b_local, spec) == (4, P(("pod",)))
+    assert "data" not in spec[0]
+
+
+def test_serve_batch_dims_nondivisible_falls_back(mesh3):
+    """A batch the fsdp degree doesn't divide must replicate (P()),
+    not crash or shard unevenly."""
+    from repro.core.engine.serve import paged_replicas, serve_batch_dims
+    cell = ShapeCell("t", "decode", 128, 6)      # 6 % (data*pod=4) != 0
+    b = _bundle(mesh3, cell)
+    b_local, spec = serve_batch_dims(b, cell)
+    assert (b_local, spec) == (6, P())
+    # replicated batch -> the paged pool has exactly one replica
+    assert paged_replicas(b, cell) == 1
+
+
+# -- paged KV config + allocator ---------------------------------------------
+
+def test_paged_kv_config_invariants():
+    kv = PagedKVConfig(page_size=16, pages_per_replica=17,
+                       max_pages_per_seq=8)
+    assert kv.max_seq_len == 128
+    assert kv.pages_needed(1) == 1
+    assert kv.pages_needed(16) == 1
+    assert kv.pages_needed(17) == 2
+    assert kv.pages_needed(128) == 8
+    with pytest.raises(ValueError):
+        PagedKVConfig(page_size=0, pages_per_replica=17, max_pages_per_seq=8)
+    with pytest.raises(ValueError):
+        # pool must hold the scratch page + at least one sequence
+        PagedKVConfig(page_size=16, pages_per_replica=8, max_pages_per_seq=8)
+
+
+def test_page_allocator_all_or_nothing():
+    kv = PagedKVConfig(page_size=16, pages_per_replica=9, max_pages_per_seq=8)
+    al = PageAllocator(kv)
+    assert al.n_free == 8                       # scratch page never allocable
+    got = al.alloc(8)
+    assert sorted(got) == list(range(1, 9))
+    assert SCRATCH_PAGE not in got
+    assert al.alloc(1) is None and al.n_free == 0
+    al.free(got[:3])
+    assert al.n_free == 3
+    assert al.alloc(4) is None                  # all-or-nothing
+    assert al.n_free == 3                       # the failed alloc took nothing
+    with pytest.raises(ValueError):
+        al.free([SCRATCH_PAGE])
+    with pytest.raises(ValueError):
+        al.free([kv.pages_per_replica])
+
+
+def test_check_paged_plan_rejects_recurrent_mixers():
+    from repro.core.engine.serve import check_paged_plan
+    check_paged_plan(types.SimpleNamespace(plan=(("attn", "mlp"),)))
+    with pytest.raises(ValueError, match="mamba"):
+        check_paged_plan(types.SimpleNamespace(
+            plan=(("attn", "mlp"), ("mamba", "mlp"))))
+
+
+# -- numerics ----------------------------------------------------------------
+
+def test_paged_decode_bit_identical_to_contiguous(served):
+    """A request served through the scheduler (chunked prefill + paged
+    decode, riding in a batch of scratch rows) must produce logits
+    BIT-identical to the same prompt through the single-request
+    contiguous prefill/decode path -- the acceptance bar for the paged
+    cache. Also pins the greedy pick to full-vocab argmax semantics."""
+    import jax.numpy as jnp
+    from repro.core.engine.serve import default_paged_kv
+    b, params = served
+    rng = np.random.default_rng(1)
+    plen, gen = 23, 6
+    prompt = rng.integers(1, DENSE.vocab_size, (plen,)).astype(np.int32)
+
+    # reference: contiguous prefill over the prompt, then decode
+    B = DEC_CELL.global_batch
+    prefill = b.make_prefill_step()
+    decode = b.make_decode_step()
+    pick = b.make_greedy_pick()
+    state = b.init_state(DEC_CELL)
+    ids = np.tile(prompt[None, :], (B, 1))
+    logits, state = prefill(params, jnp.asarray(ids), state)
+    ref_logits = [np.asarray(logits)[0]]
+    tok = np.asarray(pick(logits))
+    ref_toks = [int(tok[0])]
+    cur = jnp.asarray(tok[:, None].astype(np.int32))
+    for _ in range(gen - 1):
+        logits, state = decode(params, cur, state)
+        ref_logits.append(np.asarray(logits)[0])
+        tok = np.asarray(pick(logits))
+        ref_toks.append(int(tok[0]))
+        cur = jnp.asarray(tok[:, None].astype(np.int32))
+
+    # paged: the same request through the scheduler, chunk smaller than
+    # the prompt so prefill spans multiple (and one ragged) chunk
+    kv = default_paged_kv(b, DEC_CELL)
+    assert kv.max_pages_per_seq * kv.page_size == DEC_CELL.seq_len
+    eng = PagedServeEngine(b, kv, chunk=8, capture_logits=True)
+    results, _ = eng.serve(params, [Request(rid=0, prompt=prompt,
+                                            max_new_tokens=gen)])
+    r = results[0]
+    assert r.tokens == ref_toks
+    cap = eng.captured[0]
+    assert len(cap) == len(ref_logits)
+    for got, want in zip(cap, ref_logits):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)   # bitwise, not allclose
+    # greedy pick == argmax over the full gathered vocab (lowest index
+    # on ties), despite only per-rank candidates crossing the wire
+    for t, lg in zip(r.tokens, cap):
+        assert t == int(np.argmax(lg))
+
+
+def test_policies_emit_identical_tokens(served):
+    """Admission policy changes WHEN a request runs, never WHAT it
+    generates: continuous and static must emit identical per-request
+    token streams on a workload larger than the slot grid."""
+    from repro.core.engine.serve import default_paged_kv
+    b, params = served
+    rng = np.random.default_rng(3)
+    plens = [5, 40, 9, 33, 12, 7, 21, 60, 4, 18]          # > B=8 slots
+    gens = [4, 2, 7, 3, 1, 5, 2, 6, 3, 4]
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, DENSE.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(zip(plens, gens))]
+    kv = default_paged_kv(b, DEC_CELL)
+    cont = PagedServeEngine(b, kv, chunk=16, policy="continuous")
+    stat = PagedServeEngine(b, kv, chunk=16, policy="static",
+                            share_steps_with=cont)
+    res_c, _ = cont.serve(params, list(reqs))
+    res_s, _ = stat.serve(params, list(reqs))
+    assert len(res_c) == len(res_s) == len(reqs)
+    by_c = {r.rid: r.tokens for r in res_c}
+    by_s = {r.rid: r.tokens for r in res_s}
+    assert by_c == by_s
+    for r in res_c:
+        assert len(r.tokens) == gens[r.rid]
+    # pages all returned once drained
+    assert all(a.n_free == kv.pages_per_replica - 1 for a in cont.allocs)
+    # a request that can never fit is rejected up front, not wedged
+    with pytest.raises(ValueError, match="exceeds"):
+        cont.serve(params, [Request(rid=99,
+                                    prompt=np.ones((200,), np.int32),
+                                    max_new_tokens=9)])
+
+
+# -- planner tenancy ---------------------------------------------------------
+
+def test_kv_pages_in_cache_accounting(mesh3):
+    """kv_page_bytes_per_chip is schema-stable (0.0 without a paged
+    path) and scales linearly with pool capacity when present."""
+    from repro.core.cache import cache_bytes_per_chip
+    from repro.core.engine.serve import default_paged_kv
+    b = _bundle(mesh3)
+    assert cache_bytes_per_chip(b)["kv_page_bytes_per_chip"] == 0.0
+    kv = default_paged_kv(b, DEC_CELL)
+    got = cache_bytes_per_chip(b, kv=kv)["kv_page_bytes_per_chip"]
+    want = kv_page_bytes_per_chip(DENSE, b.mi, b.model.plan,
+                                  b.model.n_groups, kv)
+    assert got == want > 0
+    import dataclasses
+    kv2 = dataclasses.replace(kv,
+                              pages_per_replica=2 * kv.pages_per_replica)
+    got2 = cache_bytes_per_chip(b, kv=kv2)["kv_page_bytes_per_chip"]
+    assert got2 == 2 * got
+
+
+def test_plan_serve_demote_order(mesh3):
+    """Serve tau search: generous budget keeps the full pool at the
+    fastest fraction; impossible budget demotes fractions first and the
+    KV pool LAST, halving to the one-sequence floor before giving up."""
+    from repro.core.cache import MemoryPlanner
+    from repro.core.engine.serve import default_paged_kv
+    run = RunConfig(model=DENSE, shape=DEC_CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8))
+    b = _bundle(mesh3)
+    kv = default_paged_kv(b, DEC_CELL)
+
+    plan = MemoryPlanner(hbm_budget=1 << 40).plan_serve(
+        run, mesh3, kv, fractions=(1.0,))
+    assert plan.fits and plan.device_fraction == 1.0
+    assert plan.kv_pages == kv.pages_per_replica
+
+    plan2 = MemoryPlanner(hbm_budget=1).plan_serve(
+        run, mesh3, kv, fractions=(0.0,))
+    assert not plan2.fits
+    floor = 1 + kv.max_pages_per_seq
+    assert plan2.kv_pages == floor
+    pools = [it["kv_pages"] for it in plan2.iterations]
+    # fraction demotions keep the pool intact; only the tail halves it
+    assert pools[0] == kv.pages_per_replica
+    assert pools == sorted(pools, reverse=True)
+    assert pools[-1] == floor
+    # every iteration re-accounts the pool so the search is auditable
+    assert all(it["kv_page_bytes"] > 0 for it in plan2.iterations)
