@@ -1,0 +1,196 @@
+"""Regression gate over benchmark runs: diff a new timestamped run dir
+(``results/runs/<stamp>/``) against the committed ``results/baseline/``
+and fail on any metric that regresses beyond its noise band.
+
+  PYTHONPATH=src python -m benchmarks.compare                    # latest run
+  PYTHONPATH=src python -m benchmarks.compare results/runs/<stamp>
+  PYTHONPATH=src python -m benchmarks.compare --refresh-baseline
+
+Per metric, regression is direction-aware and relative:
+
+  lower-is-better :  new > base * (1 + band) + eps
+  higher-is-better:  new < base * (1 - band) - eps
+
+with the noise band taken from the NEW run's artifact (the tree under
+test declares its tolerances -- band changes are reviewed as part of
+the PR diff, and a band of 0.0 demands bit-stable equality).  Analytic
+metrics are deterministic re-derivations, so their default band is
+tight; wall-clock (timed) metrics carry wide bands because CI machines
+differ.  See ARCHITECTURE.md "Benchmark harness" for the baseline
+refresh procedure.
+
+The gate is strict about bookkeeping, with readable errors:
+  * an axis or metric present in baseline but missing from the new run
+    fails (a silently dropped assertion looks exactly like this);
+  * a schema_version mismatch on either side fails with instructions
+    to regenerate (``results.validate`` raises it);
+  * new axes/metrics that have no baseline counterpart are reported
+    but do not gate -- they start gating once the baseline is
+    refreshed.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+
+from benchmarks.harness import results
+from benchmarks.harness.results import SchemaError, metrics_of
+
+EPS = 1e-12
+
+
+def compare_metric(base, new):
+    """(status, rel_change) for one baseline/new Metric pair.
+
+    status: 'ok' | 'improved' | 'REGRESSED'.  rel_change is signed,
+    positive = got worse, in units of the baseline value."""
+    band = new.resolved_band()
+    if base.value == 0:
+        rel = float("inf") if new.value != 0 else 0.0
+    else:
+        rel = (new.value - base.value) / abs(base.value)
+    if new.direction == "lower":
+        worse = rel
+        regressed = new.value > base.value * (1 + band) + EPS
+    else:
+        worse = -rel
+        regressed = new.value < base.value * (1 - band) - EPS
+    if regressed:
+        return "REGRESSED", worse
+    return ("improved" if worse < -EPS else "ok"), worse
+
+
+def compare_runs(baseline_dir: Path, run_dir: Path):
+    """Returns (report_rows, errors). errors is non-empty on any gate
+    failure (regression, missing metric/axis, schema problem)."""
+    base_manifest, base_docs = results.load_run(baseline_dir)
+    new_manifest, new_docs = results.load_run(run_dir)
+    rows, errors = [], []
+    for axis, bdoc in sorted(base_docs.items()):
+        ndoc = new_docs.get(axis)
+        if ndoc is None:
+            errors.append(
+                f"axis {axis!r}: present in baseline but missing from "
+                f"{run_dir} -- if the axis was intentionally removed, "
+                "refresh results/baseline/")
+            continue
+        bm, nm = metrics_of(bdoc), metrics_of(ndoc)
+        for name, base in sorted(bm.items()):
+            new = nm.get(name)
+            if new is None:
+                errors.append(
+                    f"axis {axis!r}: metric {name!r} present in baseline "
+                    "but missing from the new run -- a dropped assertion "
+                    "looks exactly like this; if intentional, refresh "
+                    "results/baseline/")
+                continue
+            if new.direction != base.direction:
+                errors.append(
+                    f"axis {axis!r}: metric {name!r} changed direction "
+                    f"({base.direction!r} -> {new.direction!r}) -- "
+                    "refresh results/baseline/ to re-anchor it")
+                continue
+            status, worse = compare_metric(base, new)
+            rows.append({"axis": axis, "metric": name, "kind": new.kind,
+                         "baseline": base.value, "new": new.value,
+                         "worse_rel": worse,
+                         "band": new.resolved_band(), "status": status})
+            if status == "REGRESSED":
+                errors.append(
+                    f"axis {axis!r}: metric {name!r} regressed "
+                    f"{worse:+.3%} (baseline {base.value:.6g} -> "
+                    f"{new.value:.6g}, {new.direction} is better, "
+                    f"noise band {new.resolved_band():.3g})")
+        for name in sorted(set(nm) - set(bm)):
+            rows.append({"axis": axis, "metric": name,
+                         "kind": nm[name].kind, "baseline": None,
+                         "new": nm[name].value, "worse_rel": 0.0,
+                         "band": nm[name].resolved_band(),
+                         "status": "new"})
+    for axis in sorted(set(new_docs) - set(base_docs)):
+        rows.append({"axis": axis, "metric": "(whole axis)",
+                     "kind": "-", "baseline": None, "new": None,
+                     "worse_rel": 0.0, "band": None, "status": "new"})
+    return rows, errors
+
+
+def render(rows) -> str:
+    lines = [f"{'axis':<18} {'metric':<34} {'kind':<8} "
+             f"{'baseline':>12} {'new':>12} {'worse':>9} {'band':>7} "
+             f"status"]
+    for r in rows:
+        fb = ("-" if r["baseline"] is None else f"{r['baseline']:.5g}")
+        fn = ("-" if r["new"] is None else f"{r['new']:.5g}")
+        band = "-" if r["band"] is None else f"{r['band']:.3g}"
+        lines.append(f"{r['axis']:<18} {r['metric']:<34} {r['kind']:<8} "
+                     f"{fb:>12} {fn:>12} {r['worse_rel']:>+8.2%} "
+                     f"{band:>7} {r['status']}")
+    return "\n".join(lines)
+
+
+def latest_run(runs_root: Path) -> Path:
+    candidates = sorted(p for p in runs_root.iterdir()
+                        if (p / "manifest.json").exists())
+    if not candidates:
+        raise SchemaError(f"no benchmark runs under {runs_root} -- run "
+                          "`python -m benchmarks.run --smoke --timed` "
+                          "first")
+    return candidates[-1]
+
+
+def refresh_baseline(run_dir: Path, baseline_dir: Path) -> None:
+    manifest, docs = results.load_run(run_dir)   # validates everything
+    if manifest.get("failures"):
+        raise SchemaError(
+            f"{run_dir} has failed axes {sorted(manifest['failures'])} "
+            "-- a baseline must come from a fully green run")
+    if baseline_dir.exists():
+        shutil.rmtree(baseline_dir)
+    shutil.copytree(run_dir, baseline_dir)
+    print(f"baseline refreshed from {run_dir} "
+          f"({len(docs)} axes) -> {baseline_dir}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("run", nargs="?", default=None,
+                    help="run dir to gate (default: latest under "
+                         "results/runs/)")
+    ap.add_argument("--baseline", default=str(results.BASELINE),
+                    help="baseline run dir (default results/baseline/)")
+    ap.add_argument("--refresh-baseline", action="store_true",
+                    help="replace the baseline with the given run "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+    try:
+        run_dir = (Path(args.run) if args.run
+                   else latest_run(results.RUNS))
+        if args.refresh_baseline:
+            refresh_baseline(run_dir, Path(args.baseline))
+            return 0
+        rows, errors = compare_runs(Path(args.baseline), run_dir)
+    except SchemaError as e:
+        print(f"compare: {e}", file=sys.stderr)
+        return 1
+    print(f"# baseline: {args.baseline}")
+    print(f"# run:      {run_dir}")
+    print(render(rows))
+    if errors:
+        print(f"\n{len(errors)} gate failure(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  FAIL {e}", file=sys.stderr)
+        return 1
+    n_improved = sum(r["status"] == "improved" for r in rows)
+    print(f"\ngate OK: {len(rows)} metrics within noise bands "
+          f"({n_improved} improved)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

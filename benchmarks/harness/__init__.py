@@ -1,0 +1,25 @@
+"""Benchmark harness: workloads (declarative axis specs), execution
+(timed steady-state measurement + the analytic bodies), results
+(versioned artifact schemas, shared validate(), timestamped run dirs).
+
+``benchmarks/run.py`` is the thin driver; ``benchmarks/compare.py`` is
+the regression gate over two runs' artifacts.
+"""
+from benchmarks.harness.execution import (RunContext, TimedArm, TimingSpec,
+                                          measure_timed_arms, run_workload)
+from benchmarks.harness.results import (BASELINE, RESULTS, RUNS,
+                                        SCHEMA_VERSION, Metric, RunDir,
+                                        SchemaError, load_run,
+                                        make_artifact, metric, metrics_of,
+                                        register_axis_validator, validate,
+                                        validate_file)
+from benchmarks.harness.workloads import (FULL_WORKLOADS, SMOKE_WORKLOADS,
+                                          Workload)
+
+__all__ = [
+    "RunContext", "TimedArm", "TimingSpec", "measure_timed_arms",
+    "run_workload", "BASELINE", "RESULTS", "RUNS", "SCHEMA_VERSION",
+    "Metric", "RunDir", "SchemaError", "load_run", "make_artifact",
+    "metric", "metrics_of", "register_axis_validator", "validate",
+    "validate_file", "FULL_WORKLOADS", "SMOKE_WORKLOADS", "Workload",
+]

@@ -1,0 +1,189 @@
+"""Execution layer of the benchmark harness: timed steady-state step
+measurement alongside the analytic byte assertions the axis bodies
+carry.
+
+``measure_timed_arms`` is the one place wall-clock training numbers are
+produced: per declared arm it builds the toy StepBundle, runs
+``warmup_steps`` steps OUTSIDE the timed region (compile + allocator
+warmup; for the cross-step pipeline the prime step is part of warmup so
+only steady-state piped steps are timed), then times ``timed_steps``
+steps individually, fencing each with ``jax.block_until_ready`` on the
+full step output (params, opt state, metrics) so async dispatch cannot
+leak work across the stopwatch.  Reported per arm: median/p90/mean/
+min/max seconds over the timed steps -- median+p90 because a handful of
+CPU-CI steps has outliers and a mean would smear them.
+
+``run_workload`` drives one axis end to end: the analytic body runs
+first (its assertions are the same ones the old monolithic run.py
+carried), then the timed arms when ``--timed`` is on, and the pieces
+are assembled into one schema-validated artifact document
+(``results.make_artifact``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.harness import results
+from benchmarks.harness.results import Metric, metric
+
+# wall-clock medians on whatever machine CI landed on: only a
+# catastrophic (>2.5x) slowdown should gate
+TIMED_STEP_BAND = 1.5
+
+
+@dataclass(frozen=True)
+class TimingSpec:
+    warmup_steps: int = 2
+    timed_steps: int = 5
+
+
+@dataclass(frozen=True)
+class TimedArm:
+    """One timed configuration of an axis: a toy model + SystemConfig
+    kwargs.  The arm label becomes the key in the artifact's
+    ``timing.arms`` block and the ``step_s_<label>`` timed metric."""
+    label: str
+    system: dict                     # SystemConfig kwargs (incl. mode)
+    model: str = "dense2"            # toy arch: dense2 | dense4 | moe
+    microbatch: int = 0
+
+
+@dataclass
+class RunContext:
+    """Ambient state one benchmark invocation threads through every
+    axis body (replaces the old module-global _MODE_OVERRIDES)."""
+    rows: list = field(default_factory=list)
+    mode_overrides: tuple = ()
+    timed: bool = False
+    timing: TimingSpec = field(default_factory=TimingSpec)
+    results_dir: "Path" = None
+
+    def __post_init__(self):
+        if self.results_dir is None:
+            self.results_dir = results.RESULTS
+
+
+def _toy_model(kind: str):
+    from repro.configs.base import ModelConfig, MoEConfig
+    if kind == "dense2":
+        return ModelConfig(name="smoke-dense", family="dense",
+                           num_layers=2, d_model=64, num_heads=4,
+                           num_kv_heads=2, d_ff=128, vocab_size=256)
+    if kind == "dense4":
+        return ModelConfig(name="smoke-dense", family="dense",
+                           num_layers=4, d_model=64, num_heads=4,
+                           num_kv_heads=2, d_ff=128, vocab_size=256)
+    if kind == "moe":
+        return ModelConfig(name="smoke-moe", family="moe", num_layers=2,
+                           d_model=64, num_heads=4, num_kv_heads=2,
+                           d_ff=64, vocab_size=256,
+                           moe=MoEConfig(num_experts=4, top_k=2,
+                                         d_ff_expert=64))
+    raise ValueError(f"unknown toy model {kind!r}")
+
+
+def _summarize_times(times: List[float], warmup_steps: int) -> dict:
+    arr = np.asarray(times, dtype=np.float64)
+    return {"median_s": float(np.median(arr)),
+            "p90_s": float(np.percentile(arr, 90)),
+            "mean_s": float(arr.mean()),
+            "min_s": float(arr.min()),
+            "max_s": float(arr.max()),
+            "n": int(arr.size),
+            "warmup_steps": int(warmup_steps)}
+
+
+def time_train_arm(arm: TimedArm, spec: TimingSpec) -> dict:
+    """Steady-state wall-clock step time of one toy training arm."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
+                                    SystemConfig)
+    from repro.core.engine import StepBundle
+    from repro.launch.mesh import make_mesh
+    from repro.optim.adamw import init_opt_state
+
+    cfg = _toy_model(arm.model)
+    cell = ShapeCell("t", "train", 64, 8)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    sysc = SystemConfig(min_shard_size=8, **arm.system)
+    total = spec.warmup_steps + spec.timed_steps + 2
+    run = RunConfig(model=cfg, shape=cell, system=sysc,
+                    optimizer=OptimizerConfig(total_steps=total,
+                                              warmup_steps=1),
+                    microbatch=arm.microbatch)
+    b = StepBundle(run, mesh)
+    params = b.init_all_params(seed=0)
+    tp, fp = b.split(params)
+    opt = jax.jit(functools.partial(init_opt_state, sys=sysc))(tp)
+    rng = np.random.default_rng(0)
+    batches = [
+        {"ids": jnp.asarray(rng.integers(1, 256, (8, 64)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(1, 256, (8, 64)), jnp.int32),
+         "mask": jnp.ones((8, 64), bool)} for _ in range(2)]
+    step = b.make_train_step()
+    carry = None
+    if b.cross_step:
+        # the prime step fills the pipeline; it belongs to warmup, the
+        # timed region sees only steady-state piped steps
+        carry, _ = b.make_train_prime()(tp, fp, opt, batches[0])
+
+    def one_step(i):
+        nonlocal tp, opt, carry
+        batch = batches[i % len(batches)]
+        if b.cross_step:
+            tp, opt, carry, m = step(tp, fp, opt, carry, batch)
+        else:
+            tp, opt, m = step(tp, fp, opt, batch)
+        return m
+
+    for i in range(spec.warmup_steps):
+        # run first: the step donates the previous tp/opt buffers, so
+        # the fence must see the freshly returned ones
+        m = one_step(i)
+        jax.block_until_ready((tp, opt, m))
+    times = []
+    for i in range(spec.timed_steps):
+        t0 = time.perf_counter()
+        m = one_step(spec.warmup_steps + i)
+        jax.block_until_ready((tp, opt, m))
+        times.append(time.perf_counter() - t0)
+    return _summarize_times(times, spec.warmup_steps)
+
+
+def measure_timed_arms(axis: str, arms: Tuple[TimedArm, ...],
+                       ctx: RunContext) -> Tuple[dict, List[Metric]]:
+    """Time every declared arm; returns (timing block, timed metrics)."""
+    out_arms: Dict[str, dict] = {}
+    metrics: List[Metric] = []
+    for arm in arms:
+        t = time_train_arm(arm, ctx.timing)
+        out_arms[arm.label] = t
+        metrics.append(metric(f"step_s_{arm.label}", t["median_s"],
+                              kind="timed", direction="lower",
+                              noise_band=TIMED_STEP_BAND, unit="s"))
+        ctx.rows.append((f"{axis}/step_us_{arm.label}",
+                         t["median_s"] * 1e6, t["p90_s"] * 1e6))
+    timing = {"timed": True,
+              "warmup_steps": ctx.timing.warmup_steps,
+              "timed_steps": ctx.timing.timed_steps,
+              "arms": out_arms}
+    return timing, metrics
+
+
+def run_workload(workload, ctx: RunContext) -> dict:
+    """Run one axis: analytic body, then timed arms (when requested),
+    assembled into a schema-validated artifact document."""
+    ret = workload.fn(ctx)
+    payload, metrics = ret[0], list(ret[1])
+    timing = ret[2] if len(ret) > 2 else None
+    if ctx.timed and workload.timed_arms and timing is None:
+        timing, timed_metrics = measure_timed_arms(
+            workload.name, workload.timed_arms, ctx)
+        metrics.extend(timed_metrics)
+    return results.make_artifact(workload.name, payload, metrics, timing)

@@ -1,0 +1,310 @@
+"""Results layer of the benchmark harness: versioned artifact schemas,
+one shared ``validate()``, and timestamped run directories.
+
+Every bench axis produces ONE artifact document::
+
+    {
+      "schema_version": 1,
+      "axis": "quant",
+      ... the axis payload (legacy keys: "rows", "smoke", ...) ...,
+      "metrics": [{"name", "value", "kind", "direction",
+                   "noise_band", "unit"}, ...],
+      "timing": null | {"timed": true, "warmup_steps", "timed_steps",
+                        "arms": {label: {"median_s", "p90_s", ...}}}
+    }
+
+The payload keys stay at top level so every pre-existing consumer of
+the flat ``results/bench_smoke_*.json`` files (``make_experiments_md``,
+the CI artifact glob, ad-hoc jq) keeps working; the schema fields ride
+along.  The same document is ALSO written into the timestamped run dir
+``results/runs/<stamp>/<axis>.json`` next to a ``manifest.json``, which
+is what ``benchmarks/compare.py`` diffs against ``results/baseline/``.
+
+``metrics`` is the machine-readable gate surface: each metric carries
+its own direction (which way is better) and noise band (relative
+regression tolerance; ``None`` = the default band for its kind).  Analytic
+metrics (byte counts, ratios from the roofline model) are deterministic
+and get tight bands; wall-clock (``kind="timed"``) metrics get wide
+bands because CI machines differ -- see ARCHITECTURE.md "Benchmark
+harness" for the baseline refresh procedure.
+
+Axis-specific invariants beyond the generic schema (e.g. the serve
+artifact's "continuous strictly beats static") plug in through
+``register_axis_validator`` -- ``serve_results.py`` registers the serve
+one, so the one CI gate step validates every artifact with one loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+RESULTS = Path(__file__).resolve().parents[2] / "results"
+RUNS = RESULTS / "runs"
+BASELINE = RESULTS / "baseline"
+
+METRIC_KINDS = ("analytic", "timed")
+DIRECTIONS = ("lower", "higher")
+
+# default relative noise bands by kind: analytic numbers are
+# deterministic re-derivations (byte accounting, roofline terms) --
+# any drift is a real change; timed numbers are wall clock on whatever
+# machine CI landed on, so only a catastrophic slowdown should gate.
+DEFAULT_NOISE_BAND = {"analytic": 1e-3, "timed": 1.5}
+
+
+class SchemaError(ValueError):
+    """An artifact failed schema validation (readable message)."""
+
+
+@dataclass(frozen=True)
+class Metric:
+    """One gate-able number of a bench axis.
+
+    direction: which way is BETTER ("lower" for times/bytes/drift,
+    "higher" for throughput/reduction factors).
+    noise_band: relative tolerance for the regression gate -- new runs
+    may regress up to ``baseline * noise_band`` before compare.py
+    fails; 0.0 demands bit-stable equality, None picks the
+    DEFAULT_NOISE_BAND for the metric's kind.
+    """
+    name: str
+    value: float
+    kind: str = "analytic"            # analytic | timed
+    direction: str = "lower"          # lower | higher
+    noise_band: Optional[float] = None
+    unit: str = ""
+
+    def __post_init__(self):
+        if self.kind not in METRIC_KINDS:
+            raise SchemaError(f"metric {self.name!r}: unknown kind "
+                              f"{self.kind!r}; known {METRIC_KINDS}")
+        if self.direction not in DIRECTIONS:
+            raise SchemaError(f"metric {self.name!r}: unknown direction "
+                              f"{self.direction!r}; known {DIRECTIONS}")
+        if self.noise_band is not None and self.noise_band < 0:
+            raise SchemaError(f"metric {self.name!r}: noise_band must be "
+                              f">= 0 or None, got {self.noise_band!r}")
+
+    def resolved_band(self) -> Optional[float]:
+        return (DEFAULT_NOISE_BAND[self.kind]
+                if self.noise_band is None else self.noise_band)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def metric(name, value, kind="analytic", direction="lower",
+           noise_band=None, unit="") -> Metric:
+    """Shorthand constructor the axis bodies use."""
+    return Metric(name=name, value=float(value), kind=kind,
+                  direction=direction, noise_band=noise_band, unit=unit)
+
+
+# ---------------------------------------------------------------------------
+# artifact documents
+# ---------------------------------------------------------------------------
+
+def make_artifact(axis: str, payload: dict,
+                  metrics: List[Metric] = (),
+                  timing: Optional[dict] = None) -> dict:
+    """Assemble the versioned artifact document for one axis."""
+    doc = dict(payload)
+    for k in ("axis", "schema_version", "metrics", "timing"):
+        if k in payload:
+            raise SchemaError(f"axis {axis!r}: payload key {k!r} collides "
+                              "with the artifact envelope")
+    doc["axis"] = axis
+    doc["schema_version"] = SCHEMA_VERSION
+    doc["metrics"] = [m.to_json() for m in metrics]
+    doc["timing"] = timing
+    return doc
+
+
+def metrics_of(doc: dict) -> Dict[str, Metric]:
+    """Parse (and re-validate) a document's metrics by name."""
+    out = {}
+    for m in doc.get("metrics", []):
+        mm = Metric(**m)
+        if mm.name in out:
+            raise SchemaError(f"axis {doc.get('axis')!r}: duplicate "
+                              f"metric name {mm.name!r}")
+        out[mm.name] = mm
+    return out
+
+
+# axis name -> callable(doc) raising on violated axis-specific invariants
+_AXIS_VALIDATORS: Dict[str, Callable[[dict], None]] = {}
+
+
+def register_axis_validator(axis: str, fn: Callable[[dict], None]) -> None:
+    _AXIS_VALIDATORS[axis] = fn
+
+
+_TIMING_ARM_KEYS = ("median_s", "p90_s", "mean_s", "n")
+
+
+def validate(doc: dict, axis: str = None) -> None:
+    """Shared schema gate for every bench artifact; raises SchemaError
+    with a message that names the offending field."""
+    if not isinstance(doc, dict):
+        raise SchemaError(f"artifact must be a JSON object, got "
+                          f"{type(doc).__name__}")
+    got_axis = doc.get("axis")
+    if not got_axis:
+        raise SchemaError("artifact missing 'axis'")
+    if axis is not None and got_axis != axis:
+        raise SchemaError(f"artifact axis {got_axis!r} != expected {axis!r}")
+    v = doc.get("schema_version")
+    if v != SCHEMA_VERSION:
+        raise SchemaError(
+            f"axis {got_axis!r}: schema_version {v!r} != supported "
+            f"{SCHEMA_VERSION} -- regenerate the artifact (or refresh "
+            "results/baseline/) with this tree's harness")
+    if not isinstance(doc.get("metrics"), list):
+        raise SchemaError(f"axis {got_axis!r}: 'metrics' must be a list")
+    for m in metrics_of(doc).values():
+        val = m.value
+        if not isinstance(val, (int, float)) or val != val:  # NaN check
+            raise SchemaError(f"axis {got_axis!r}: metric {m.name!r} "
+                              f"value {val!r} is not a finite number")
+    timing = doc.get("timing", None)
+    if timing is not None:
+        if not timing.get("timed"):
+            raise SchemaError(f"axis {got_axis!r}: timing block present "
+                              "but not marked timed")
+        arms = timing.get("arms")
+        if not isinstance(arms, dict) or not arms:
+            raise SchemaError(f"axis {got_axis!r}: timing block has no "
+                              "arms")
+        for label, arm in arms.items():
+            for k in _TIMING_ARM_KEYS:
+                if k not in arm:
+                    raise SchemaError(
+                        f"axis {got_axis!r}: timing arm {label!r} "
+                        f"missing {k!r}")
+                if arm[k] < 0:
+                    raise SchemaError(
+                        f"axis {got_axis!r}: timing arm {label!r} "
+                        f"{k}={arm[k]!r} < 0")
+    extra = _AXIS_VALIDATORS.get(got_axis)
+    if extra is not None:
+        extra(doc)
+
+
+def validate_file(path) -> dict:
+    path = Path(path)
+    try:
+        doc = json.load(open(path))
+    except Exception as e:
+        raise SchemaError(f"{path}: unreadable JSON ({e})")
+    try:
+        validate(doc)
+    except SchemaError as e:
+        raise SchemaError(f"{path}: {e}")
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# run directories
+# ---------------------------------------------------------------------------
+
+def _env_info() -> dict:
+    info = {"python": sys.version.split()[0],
+            "platform": platform.platform()}
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["device_count"] = jax.device_count()
+    except Exception:
+        pass
+    return info
+
+
+@dataclass
+class RunDir:
+    """One timestamped benchmark run: results/runs/<stamp>/ holding a
+    manifest.json plus one validated artifact per axis.  The flat
+    ``results/bench_smoke_*.json`` files are written from the same
+    documents for back-compat with make_experiments_md and the CI
+    artifact glob."""
+    path: Path
+    stamp: str
+    smoke: bool = True
+    timed: bool = False
+    axes: List[str] = field(default_factory=list)
+    artifacts: Dict[str, str] = field(default_factory=dict)
+    failures: Dict[str, str] = field(default_factory=dict)
+
+    @classmethod
+    def create(cls, *, smoke: bool, timed: bool, root: Path = None,
+               stamp: str = None) -> "RunDir":
+        stamp = stamp or time.strftime("%Y%m%d-%H%M%S")
+        path = (root or RUNS) / stamp
+        # a second run inside the same second must not overwrite
+        n = 0
+        while path.exists():
+            n += 1
+            path = (root or RUNS) / f"{stamp}-{n}"
+        path.mkdir(parents=True)
+        return cls(path=path, stamp=path.name, smoke=smoke, timed=timed)
+
+    def write_axis(self, doc: dict, flat_path: Path = None) -> Path:
+        """Validate and persist one axis artifact (run dir + optional
+        flat back-compat copy)."""
+        validate(doc)
+        axis = doc["axis"]
+        name = f"{axis}.json"
+        with open(self.path / name, "w") as f:
+            json.dump(doc, f, indent=2, default=float)
+        if flat_path is not None:
+            with open(flat_path, "w") as f:
+                json.dump(doc, f, indent=2, default=float)
+        self.axes.append(axis)
+        self.artifacts[axis] = name
+        return self.path / name
+
+    def record_failure(self, axis: str, err: str) -> None:
+        self.failures[axis] = err
+
+    def finalize(self, extra: dict = None) -> Path:
+        manifest = {"schema_version": SCHEMA_VERSION,
+                    "stamp": self.stamp,
+                    "smoke": self.smoke,
+                    "timed": self.timed,
+                    "axes": self.axes,
+                    "artifacts": self.artifacts,
+                    "failures": self.failures,
+                    "env": _env_info()}
+        if extra:
+            manifest.update(extra)
+        out = self.path / "manifest.json"
+        with open(out, "w") as f:
+            json.dump(manifest, f, indent=2, default=float)
+        return out
+
+
+def load_run(path) -> (dict, Dict[str, dict]):
+    """Load a run dir (or results/baseline): (manifest, {axis: doc})."""
+    path = Path(path)
+    mpath = path / "manifest.json"
+    if not mpath.exists():
+        raise SchemaError(f"{path}: no manifest.json -- not a benchmark "
+                          "run directory")
+    manifest = json.load(open(mpath))
+    v = manifest.get("schema_version")
+    if v != SCHEMA_VERSION:
+        raise SchemaError(f"{mpath}: manifest schema_version {v!r} != "
+                          f"supported {SCHEMA_VERSION}")
+    docs = {}
+    for axis, name in manifest.get("artifacts", {}).items():
+        docs[axis] = validate_file(path / name)
+    return manifest, docs

@@ -75,13 +75,67 @@ def smoke_appendix():
         except Exception as e:  # keep the table rendering over one bad file
             out.append(f"| {f.name} | unreadable: {e} | — |")
             continue
-        if "rows" in data:      # a single-bench smoke file
+        if "axis" in data:      # a harness per-axis artifact
+            arms = sorted(((data.get("timing") or {}).get("arms") or {}))
+            keys = (f"axis {data['axis']} "
+                    f"(schema v{data.get('schema_version')}, "
+                    f"{len(data.get('metrics', []))} gated metrics"
+                    + (f", timed arms: {', '.join(arms)}" if arms else "")
+                    + ")")
+            n = (len(data["rows"]) if isinstance(data.get("rows"), list)
+                 else len(data.get("metrics", [])))
+        elif "rows" in data:    # a pre-harness single-bench smoke file
             keys, n = "smoke", len(data["rows"])
         else:                   # the aggregate bench_smoke.json
             keys = ", ".join(sorted(data))
-            n = sum(len(v.get("rows", []))
-                    for v in data.values() if isinstance(v, dict))
+            n = sum(len(v["rows"])
+                    for v in data.values()
+                    if isinstance(v, dict)
+                    and isinstance(v.get("rows"), list))
         out.append(f"| {f.name} | {keys} | {n} |")
+    return "\n".join(out)
+
+
+def timed_table():
+    """Wall-clock step timings from the latest timestamped run dir
+    (results/runs/<stamp>/): per axis arm the warmed-up median/p90/mean
+    over the fenced timed steps.  Absolute numbers are
+    machine-dependent -- the regression gate (benchmarks/compare.py)
+    holds them inside wide noise bands vs results/baseline/, while the
+    analytic byte metrics in the same artifacts carry tight bands."""
+    manifests = sorted((RESULTS / "runs").glob("*/manifest.json"))
+    if not manifests:
+        return _MISSING.format(
+            name="runs/<stamp>/manifest.json",
+            cmd="`python -m benchmarks.run --smoke --timed`")
+    run_dir = manifests[-1].parent
+    manifest = json.load(open(manifests[-1]))
+    out = ["| axis | arm | median/step | p90 | mean | timed steps |",
+           "|---|---|---|---|---|---|"]
+    n_arms = 0
+    for axis, name in manifest.get("artifacts", {}).items():
+        doc = json.load(open(run_dir / name))
+        t = doc.get("timing")
+        if not t:
+            continue
+        for label, a in sorted(t["arms"].items()):
+            out.append(f"| {axis} | {label} | {fmt_s(a['median_s'])} | "
+                       f"{fmt_s(a['p90_s'])} | {fmt_s(a['mean_s'])} | "
+                       f"{a['n']} |")
+            n_arms += 1
+    if not n_arms:
+        return _MISSING.format(
+            name=f"timing blocks in {run_dir.name}",
+            cmd="`python -m benchmarks.run --smoke --timed`")
+    env = manifest.get("env", {})
+    out.append("")
+    out.append(
+        f"Run `{manifest['stamp']}` ({env.get('platform', 'unknown')}, "
+        f"jax {env.get('jax', '?')}, backend {env.get('backend', '?')}). "
+        "Warmup steps excluded; each timed step is fenced with "
+        "`jax.block_until_ready` on the full step output. The serve "
+        "axis's arms report the measured inter-token-latency "
+        "distribution instead of a train-step time.")
     return "\n".join(out)
 
 
@@ -226,6 +280,7 @@ def main():
         table_1pod=table_1pod,
         table_2pod=table_2pod,
         smoke_appendix=smoke_appendix(),
+        timed_table=timed_table(),
         fused_table=fused_table(),
         serve_table=serve_table(),
         **kw,
@@ -529,6 +584,19 @@ are wall-clock measurements -- the first timed numbers in this log; all
 tables above are roofline-derived:
 
 {serve_table}
+
+## §Timed smoke step times (wall-clock, regression-gated)
+
+`python -m benchmarks.run --smoke --timed` times the toy training arms
+each axis declares (e.g. comm's fcdp-vs-zero3, quant's bf16-vs-int8,
+fused's unfused-vs-fused) on the 8-device CPU mesh: warmup steps
+excluded, every timed step fenced with `jax.block_until_ready`, and the
+median gated against `results/baseline/` by `benchmarks/compare.py`
+inside a wide noise band (absolute CPU numbers are machine noise — only
+a catastrophic slowdown gates; the tight gates are the analytic byte
+metrics in the same artifacts):
+
+{timed_table}
 
 ## §CI smoke artifacts
 

@@ -1,23 +1,29 @@
-"""Serve-bench artifact schema + writer (the results half of the
-workload/results split -- ``serve_workload.py`` owns the workload).
+"""Serve-bench artifact payload + axis validator (the results half of
+the workload/results split -- ``serve_workload.py`` owns the workload).
 
-The artifact (``results/bench_smoke_serve.json``) is the repo's first
-TIMED perf artifact: every latency number in it is wall-clock measured
-on the machine that produced it, not derived from the roofline model.
-``validate()`` is shared by the bench itself and the CI gate so the
-schema can't silently rot.
+The schema+validate pattern that started here is now generalized into
+``benchmarks/harness/results.py``: the serve axis builds its payload
+with ``make_payload``, the harness wraps it into the shared versioned
+artifact envelope, and the serve-specific invariants below are
+registered as the axis validator for ``serve_smoke`` -- so the one CI
+gate step that loops over every bench artifact also enforces them.
+
+The serve numbers are wall-clock measured on the machine that produced
+them, not derived from the roofline model.
 """
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
+from benchmarks.harness import results as hresults
+
 LATENCY_KEYS = ("ttft_s", "tpot_s", "itl_s")
 PCT_KEYS = ("mean", "p50", "p90", "p99")
 
 
-def make_artifact(workload: dict, kv: dict, arms: dict,
-                  extra: dict = None) -> dict:
+def make_payload(workload: dict, kv: dict, arms: dict,
+                 extra: dict = None) -> dict:
     """arms: {policy_name: summarize(...) dict} -- at least
     'continuous' and 'static'."""
     doc = {"smoke": True, "timed": True, "workload": workload, "kv": kv,
@@ -53,6 +59,18 @@ def validate(doc: dict) -> None:
             > arms["static"]["throughput_rps"]), (
         arms["continuous"]["throughput_rps"],
         arms["static"]["throughput_rps"])
+
+
+# the serve invariants ride the shared gate: every artifact whose
+# "axis" is serve_smoke gets them on top of the generic schema checks
+hresults.register_axis_validator("serve_smoke", validate)
+
+
+def make_artifact(workload: dict, kv: dict, arms: dict,
+                  extra: dict = None) -> dict:
+    """Deprecated pre-harness entry point (payload-only artifact);
+    kept for one release for external scripts."""
+    return make_payload(workload, kv, arms, extra)
 
 
 def write(path: Path, doc: dict) -> None:

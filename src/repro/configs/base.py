@@ -156,12 +156,14 @@ class SystemConfig:
     # where stage 1 is structurally empty. None -> derived from the
     # legacy `prefetch` bool (True -> 1).
     prefetch_depth: Optional[int] = None
-    # legacy alias: an init-only bool (True -> depth 1, False -> depth
-    # 0). Because it is an InitVar, dataclasses.replace() never carries
-    # it over, so a non-None value here was ALWAYS passed explicitly in
-    # this construction and wins over a (possibly replace-carried)
-    # prefetch_depth. Old readers keep working through the read-only
-    # `prefetch` property (== prefetch_depth > 0) installed below.
+    # DEPRECATED legacy alias (DeprecationWarning on use, removed next
+    # release -- pass prefetch_depth): an init-only bool (True -> depth
+    # 1, False -> depth 0). Because it is an InitVar,
+    # dataclasses.replace() never carries it over, so a non-None value
+    # here was ALWAYS passed explicitly in this construction and wins
+    # over a (possibly replace-carried) prefetch_depth. Old readers
+    # keep working through the read-only `prefetch` property
+    # (== prefetch_depth > 0) installed below.
     prefetch: dataclasses.InitVar[Optional[bool]] = None
     # second scheduler stream (engine/train.py): on the gradient-
     # accumulation path, hold microbatch i's stage-1-level gradients for
@@ -272,6 +274,17 @@ class SystemConfig:
                 f"unknown activation_policy {self.activation_policy!r}; "
                 f"known: {sorted(ACTIVATION_POLICIES)}")
         depth = self.prefetch_depth
+        if prefetch is not None:
+            # one-release migration path: the boolean knob is deprecated
+            # in favor of the single prefetch_depth int (the launchers
+            # already dropped --prefetch/--no-prefetch for
+            # --prefetch-depth); next release the InitVar goes away.
+            import warnings
+            warnings.warn(
+                "SystemConfig(prefetch=...) is deprecated; pass "
+                "prefetch_depth instead (True -> 1, False -> 0). The "
+                "boolean shim will be removed in the next release.",
+                DeprecationWarning, stacklevel=3)
         if depth is None:                    # legacy bool shim
             depth = 1 if prefetch else 0
         elif prefetch is not None:

@@ -24,8 +24,8 @@ from repro.configs.base import (RunConfig, SystemConfig, shape_cell,
                                 SHAPE_CELLS)
 from repro.configs.registry import (ARCH_IDS, cell_supported, get_config)
 from repro.core.engine import StepBundle
-from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
-                                 strategy_names)
+from repro.core.strategy import DEFAULT_STRATEGY
+from repro.launch.cli import add_system_args, system_config_from_args
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collect_collectives, flops_bytes_from_jaxpr,
                                    fused_overlap_credit,
@@ -40,11 +40,11 @@ def _mesh_sizes(mesh):
 
 def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
                 mode: str = DEFAULT_STRATEGY, system_overrides=None,
-                verbose: bool = True, prefetch: bool = True,
-                prefetch_depth=None, mode_overrides=(),
-                microbatch: int = 0, async_grad_reduce: bool = False,
+                verbose: bool = True, prefetch_depth=None,
+                mode_overrides=(), microbatch: int = 0,
+                async_grad_reduce: bool = False,
                 cross_step: bool = False, param_compress: str = "none",
-                fused_matmul: str = "none"):
+                fused_matmul: str = "none", system: SystemConfig = None):
     """mode_overrides: per-tensor strategy rules ((path-glob, mode), ...)
     layered on top of ``mode`` -- the dry-run reports the per-group
     byte breakdown whenever the resolution is mixed.
@@ -52,9 +52,17 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     cross_step lowers the STEADY-STATE (piped) step of the cross-step
     optimizer pipeline (requires async_grad_reduce and microbatch >= 2);
     its per-step DCN volume is byte-identical to the fused step, and the
-    JSON additionally carries ``cross_step_buffer_bytes_per_chip``."""
+    JSON additionally carries ``cross_step_buffer_bytes_per_chip``.
+
+    system: a pre-built SystemConfig (the shared launch/cli.py surface)
+    used as-is, superseding the individual knob kwargs above; the
+    dry-run still pins its loss_chunk=2048 + block_io policy (the
+    HBM-fitting defaults every table is defined on) unless
+    system_overrides says otherwise."""
     cfg = get_config(arch)
     cell = shape_cell(cell_name)
+    if system is not None:
+        mode = system.mode
     ok, why = cell_supported(cfg, cell)
     if not ok:
         return {"arch": arch, "cell": cell_name, "multi_pod": multi_pod,
@@ -63,18 +71,19 @@ def dryrun_cell(arch: str, cell_name: str, multi_pod: bool,
     # block_io (full activation remat) is the HBM-fitting default on
     # 16 GB v5e at the assigned shapes; the paper-faithful save_all
     # variant is compared in benchmarks/bench_memory.py (see EXPERIMENTS.md)
-    if prefetch_depth is None:
-        prefetch_depth = 1 if prefetch else 0
-    sysc = SystemConfig(mode=mode, loss_chunk=2048,
-                        activation_policy="block_io",
-                        prefetch_depth=prefetch_depth,
-                        async_grad_reduce=async_grad_reduce,
-                        cross_step_pipeline=cross_step,
-                        param_compress=param_compress,
-                        fused_matmul=fused_matmul,
-                        mode_overrides=tuple(mode_overrides or ()))
+    if system is None:
+        if prefetch_depth is None:
+            prefetch_depth = 1      # dry-run's historical overlap-on default
+        system = SystemConfig(mode=mode, prefetch_depth=prefetch_depth,
+                              async_grad_reduce=async_grad_reduce,
+                              cross_step_pipeline=cross_step,
+                              param_compress=param_compress,
+                              fused_matmul=fused_matmul,
+                              mode_overrides=tuple(mode_overrides or ()))
+    sysc = system.replace(loss_chunk=2048, activation_policy="block_io")
     if system_overrides:
         sysc = sysc.replace(**system_overrides)
+    fused_matmul = sysc.fused_matmul
     run = RunConfig(model=cfg, shape=cell, system=sysc,
                     microbatch=microbatch)
     t0 = time.time()
@@ -200,41 +209,12 @@ def main():
                     choices=[c.name for c in SHAPE_CELLS] + [None])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--single-pod", action="store_true")
-    ap.add_argument("--mode", default=DEFAULT_STRATEGY,
-                    choices=list(strategy_names()))
-    ap.add_argument("--mode-override", action="append", default=[],
-                    metavar="GLOB=MODE",
-                    help="per-tensor strategy override rule matched "
-                         "against dotted param paths, first match wins; "
-                         "repeatable (e.g. --mode-override "
-                         "'blocks.*.moe.we_*=mics' --mode-override "
-                         "'embed=hier')")
-    ap.add_argument("--no-prefetch", action="store_true",
-                    help="disable the layer-ahead stage-1 gather prefetch")
-    ap.add_argument("--prefetch-depth", type=int, default=None,
-                    help="ring depth of the streaming gather scheduler "
-                         "(default: 1, or 0 with --no-prefetch)")
+    # the dry-run keeps its historical overlap-on default (depth 1);
+    # --prefetch-depth 0 is the old --no-prefetch
+    add_system_args(ap, default_prefetch_depth=1)
     ap.add_argument("--microbatch", type=int, default=0,
                     help="gradient-accumulation microbatches for train "
                          "cells (required >= 2 for --cross-step-pipeline)")
-    ap.add_argument("--async-grad-reduce", action="store_true",
-                    help="lower train cells with the async pod-axis "
-                         "gradient-reduce stream")
-    ap.add_argument("--param-compress", default="none",
-                    choices=("none", "int8_pod"),
-                    help="qwZ: transport the stage-1 (pod-axis) weight "
-                         "all-gather as int8 blocks + f32 scales")
-    ap.add_argument("--fused-matmul", default="none",
-                    choices=("none", "ag_matmul", "both"),
-                    help="gather-fused collective matmul: consume stage-2 "
-                         "weight chunks inside the ring-scheduled matmul "
-                         "(ag_matmul: fused fwd, bit-parity bwd; both: bwd "
-                         "ring-fused too)")
-    ap.add_argument("--cross-step-pipeline", action="store_true",
-                    help="lower the steady-state cross-step-pipelined "
-                         "train step (implies the carry in the input "
-                         "signature; needs --async-grad-reduce and "
-                         "--microbatch >= 2)")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x cell) on both meshes")
     ap.add_argument("--out", default=None)
@@ -261,19 +241,12 @@ def main():
             pods.append(False)
         combos = [(a, c, mp) for a in archs for c in cells for mp in pods]
 
-    overrides = tuple(parse_mode_override(s) for s in args.mode_override)
+    sysc = system_config_from_args(args)
     failures = 0
     for arch, cell, mp in combos:
         try:
-            r = dryrun_cell(arch, cell, mp, args.mode,
-                            prefetch=not args.no_prefetch,
-                            prefetch_depth=args.prefetch_depth,
-                            mode_overrides=overrides,
-                            microbatch=args.microbatch,
-                            async_grad_reduce=args.async_grad_reduce,
-                            cross_step=args.cross_step_pipeline,
-                            param_compress=args.param_compress,
-                            fused_matmul=args.fused_matmul)
+            r = dryrun_cell(arch, cell, mp, system=sysc,
+                            microbatch=args.microbatch)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             r = {"arch": arch, "cell": cell, "multi_pod": mp,
@@ -286,7 +259,8 @@ def main():
                   f"SKIP: {r['reason']}")
 
     out = args.out or (RESULTS_DIR / (
-        f"dryrun_{args.mode}{'_mixed' if overrides else ''}.json"))
+        f"dryrun_{args.mode}"
+        f"{'_mixed' if sysc.mode_overrides else ''}.json"))
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
     print(f"\nwrote {out}; {len(results)} cells, {failures} failures")

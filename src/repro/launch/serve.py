@@ -20,12 +20,13 @@ import time
 
 import numpy as np
 
-from repro.configs.base import RunConfig, ShapeCell, SystemConfig
+from repro.configs.base import RunConfig, ShapeCell
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core.engine import StepBundle
 from repro.core.engine.serve import default_paged_kv
 from repro.core.kv_cache import PagedKVConfig
 from repro.core.serve_schedule import PagedServeEngine, Request, summarize
+from repro.launch.cli import add_system_args, system_config_from_args
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 
 
@@ -46,6 +47,7 @@ def mixed_requests(n: int, seq_len: int, gen_len: int, vocab: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    add_system_args(ap)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
@@ -70,7 +72,7 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     cell = ShapeCell("serve", "decode", args.seq_len, args.batch)
     run = RunConfig(model=cfg, shape=cell,
-                    system=SystemConfig(min_shard_size=8))
+                    system=system_config_from_args(args, min_shard_size=8))
     bundle = StepBundle(run, mesh)
     params = bundle.init_all_params(seed=0)
 

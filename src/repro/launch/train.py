@@ -20,12 +20,11 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
-                                SystemConfig, shape_cell)
+                                shape_cell)
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core.engine import StepBundle
-from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
-                                 strategy_names)
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
+from repro.launch.cli import add_system_args, system_config_from_args
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.optim.adamw import init_opt_state
 from repro.runtime.elastic import mesh_meta, reshard_state
@@ -46,27 +45,8 @@ def build(args):
         cfg = get_config(args.arch)
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         cell = shape_cell(args.cell)
-    sysc = SystemConfig(mode=args.mode, peft=args.peft,
-                        mode_overrides=tuple(
-                            parse_mode_override(s)
-                            for s in args.mode_override),
-                        activation_policy=args.activation_policy,
-                        loss_chunk=args.loss_chunk,
-                        min_shard_size=8 if args.smoke else 2048,
-                        grad_compress=args.grad_compress,
-                        param_compress=args.param_compress,
-                        quant_impl=args.quant_impl,
-                        fused_matmul=args.fused_matmul,
-                        fused_impl=args.fused_impl,
-                        # --prefetch-depth overrides --prefetch (an
-                        # explicit bool beats a depth in SystemConfig,
-                        # so drop the bool whenever a depth was given;
-                        # an unset bool is forwarded as None, not False)
-                        prefetch=(args.prefetch or None
-                                  if args.prefetch_depth is None else None),
-                        prefetch_depth=args.prefetch_depth,
-                        async_grad_reduce=args.async_grad_reduce,
-                        cross_step_pipeline=args.cross_step_pipeline)
+    sysc = system_config_from_args(
+        args, min_shard_size=8 if args.smoke else 2048)
     run = RunConfig(model=cfg, shape=cell, system=sysc,
                     optimizer=OptimizerConfig(
                         lr=args.lr, total_steps=args.steps,
@@ -158,56 +138,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--cell", default="train_4k")
-    ap.add_argument("--mode", default=DEFAULT_STRATEGY,
-                    choices=list(strategy_names()))
-    ap.add_argument("--mode-override", action="append", default=[],
-                    metavar="GLOB=MODE",
-                    help="per-tensor strategy override (repeatable, "
-                         "first match wins), e.g. --mode-override "
-                         "'blocks.*.moe.we_*=mics'")
-    ap.add_argument("--prefetch", action="store_true",
-                    help="layer-ahead stage-1 gather prefetch (depth 1)")
-    ap.add_argument("--prefetch-depth", type=int, default=None,
-                    help="ring depth of the streaming gather scheduler "
-                         "(overrides --prefetch)")
-    ap.add_argument("--async-grad-reduce", action="store_true",
-                    help="overlap microbatch i's pod-axis grad reduce "
-                         "with microbatch i+1's forward (needs "
-                         "--microbatch > 1)")
-    ap.add_argument("--cross-step-pipeline", action="store_true",
-                    help="carry step i's optimizer epilogue (last pod "
-                         "reduce + update + widened gather) across the "
-                         "step boundary and overlap it with step i+1's "
-                         "first forward (needs --async-grad-reduce and "
-                         "--microbatch >= 2; bit-identical results)")
+    add_system_args(ap)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--peft", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--seq-len", type=int, default=0)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatch", type=int, default=0)
-    ap.add_argument("--loss-chunk", type=int, default=0)
-    ap.add_argument("--activation-policy", default="save_all")
-    ap.add_argument("--grad-compress", default="none",
-                    choices=("none", "int8_pod"))
-    ap.add_argument("--param-compress", default="none",
-                    choices=("none", "int8_pod"),
-                    help="qwZ: int8-transported stage-1 weight all-gather")
-    ap.add_argument("--quant-impl", default="jnp",
-                    choices=("jnp", "pallas", "pallas_interpret"),
-                    help="codepath for the int8 quantize/dequantize steps")
-    ap.add_argument("--fused-matmul", default="none",
-                    choices=("none", "ag_matmul", "both"),
-                    help="gather-fused collective matmul: consume stage-2 "
-                         "shards as they arrive in a ppermute ring instead "
-                         "of all-gathering before the matmul (ag_matmul = "
-                         "forward only, both = forward + dual grad rings)")
-    ap.add_argument("--fused-impl", default="jnp",
-                    choices=("jnp", "pallas", "pallas_interpret"),
-                    help="codepath for the per-chunk matmul inside the "
-                         "fused ring")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])

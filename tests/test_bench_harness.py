@@ -1,0 +1,260 @@
+"""Benchmark harness unit tests: artifact schema validation, the
+regression gate's noise-band semantics, and its failure modes.
+
+Everything here runs on synthetic fixtures -- no StepBundle, no jax
+compile -- so the gate's logic is testable in milliseconds.  The
+end-to-end path (real axes -> run dir -> compare) is exercised by CI's
+timed-smoke job against results/baseline/.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.harness import results  # noqa: E402
+from benchmarks.harness.results import (Metric, RunDir, SchemaError,  # noqa: E402
+                                        make_artifact, metric, validate)
+from benchmarks import compare  # noqa: E402
+
+
+def _mk_doc(axis="toy", values=None, bands=None, timing=None):
+    values = values or {"bytes": 100.0, "speedup": 2.0}
+    bands = bands or {}
+    metrics = [
+        metric("bytes", values["bytes"], direction="lower",
+               noise_band=bands.get("bytes", 1e-3), unit="B"),
+        metric("speedup", values["speedup"], direction="higher",
+               noise_band=bands.get("speedup", 0.05), unit="x"),
+    ]
+    return make_artifact(axis, {"smoke": True, "rows": []}, metrics,
+                         timing=timing)
+
+
+def _mk_run(tmp_path, name, docs):
+    rd = RunDir.create(smoke=True, timed=True, root=tmp_path / name,
+                       stamp="stamp")
+    for doc in docs:
+        rd.write_axis(doc)
+    rd.finalize()
+    return rd.path
+
+
+# ---------------------------------------------------------------------------
+# schema layer
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_validates():
+    doc = _mk_doc()
+    validate(doc)                       # no raise
+    assert doc["schema_version"] == results.SCHEMA_VERSION
+    assert doc["axis"] == "toy"
+    # payload keys stay at top level for the legacy flat consumers
+    assert doc["smoke"] is True and doc["rows"] == []
+
+
+def test_schema_version_mismatch_readable():
+    doc = _mk_doc()
+    doc["schema_version"] = 99
+    with pytest.raises(SchemaError, match="schema_version 99"):
+        validate(doc)
+    with pytest.raises(SchemaError, match="regenerate"):
+        validate(doc)
+
+
+def test_envelope_collision_rejected():
+    with pytest.raises(SchemaError, match="collides"):
+        make_artifact("toy", {"metrics": []}, [])
+
+
+def test_metric_field_validation():
+    with pytest.raises(SchemaError, match="unknown kind"):
+        Metric(name="x", value=1.0, kind="vibes")
+    with pytest.raises(SchemaError, match="unknown direction"):
+        Metric(name="x", value=1.0, direction="sideways")
+    with pytest.raises(SchemaError, match="noise_band"):
+        Metric(name="x", value=1.0, noise_band=-0.1)
+    doc = _mk_doc()
+    doc["metrics"][0]["value"] = float("nan")
+    with pytest.raises(SchemaError, match="finite"):
+        validate(doc)
+
+
+def test_timing_block_schema():
+    ok = {"timed": True, "warmup_steps": 2, "timed_steps": 5,
+          "arms": {"a": {"median_s": 0.1, "p90_s": 0.2, "mean_s": 0.12,
+                         "min_s": 0.09, "n": 5}}}
+    validate(_mk_doc(timing=ok))
+    bad = {"timed": True, "arms": {"a": {"median_s": 0.1}}}
+    with pytest.raises(SchemaError, match="missing 'p90_s'"):
+        validate(_mk_doc(timing=bad))
+    with pytest.raises(SchemaError, match="no.*arms"):
+        validate(_mk_doc(timing={"timed": True, "arms": {}}))
+
+
+def test_axis_validator_plugs_into_shared_gate():
+    def extra(doc):
+        raise SchemaError("axis invariant violated")
+    results.register_axis_validator("picky", extra)
+    try:
+        with pytest.raises(SchemaError, match="axis invariant"):
+            validate(_mk_doc(axis="picky"))
+    finally:
+        results._AXIS_VALIDATORS.pop("picky")
+
+
+def test_run_dir_manifest(tmp_path):
+    path = _mk_run(tmp_path, "r", [_mk_doc("a"), _mk_doc("b")])
+    manifest, docs = results.load_run(path)
+    assert manifest["axes"] == ["a", "b"]
+    assert set(docs) == {"a", "b"}
+    assert (path / "manifest.json").exists()
+    # not-a-run-dir error is readable
+    with pytest.raises(SchemaError, match="manifest.json"):
+        results.load_run(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+# ---------------------------------------------------------------------------
+
+def test_identical_runs_pass(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    new = _mk_run(tmp_path, "new", [_mk_doc()])
+    rows, errors = compare.compare_runs(base, new)
+    assert not errors
+    assert all(r["status"] == "ok" for r in rows)
+
+
+def test_within_band_jitter_passes(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    # bytes +0.05% (band 0.1%), speedup -4% (band 5%)
+    new = _mk_run(tmp_path, "new", [
+        _mk_doc(values={"bytes": 100.05, "speedup": 1.92})])
+    rows, errors = compare.compare_runs(base, new)
+    assert not errors, errors
+
+
+def test_beyond_band_regression_fails(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    # bytes +10% against a 0.1% band: must gate
+    new = _mk_run(tmp_path, "new", [
+        _mk_doc(values={"bytes": 110.0, "speedup": 2.0})])
+    rows, errors = compare.compare_runs(base, new)
+    assert len(errors) == 1
+    assert "bytes" in errors[0] and "regressed" in errors[0]
+    assert next(r for r in rows if r["metric"] == "bytes")["status"] \
+        == "REGRESSED"
+
+
+def test_direction_aware_higher_is_better(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    # speedup 2.0 -> 1.7 is -15% against a 5% band: must gate;
+    # speedup 2.0 -> 2.5 is an improvement, never gated
+    worse = _mk_run(tmp_path, "worse", [
+        _mk_doc(values={"bytes": 100.0, "speedup": 1.7})])
+    better = _mk_run(tmp_path, "better", [
+        _mk_doc(values={"bytes": 100.0, "speedup": 2.5})])
+    _, errors = compare.compare_runs(base, worse)
+    assert len(errors) == 1 and "speedup" in errors[0]
+    rows, errors = compare.compare_runs(base, better)
+    assert not errors
+    assert next(r for r in rows if r["metric"] == "speedup")["status"] \
+        == "improved"
+
+
+def test_zero_band_demands_equality(tmp_path):
+    mk = lambda v: make_artifact(
+        "toy", {}, [metric("bit_identical", v, direction="higher",
+                           noise_band=0.0)])
+    base = _mk_run(tmp_path, "base", [mk(1.0)])
+    same = _mk_run(tmp_path, "same", [mk(1.0)])
+    broke = _mk_run(tmp_path, "broke", [mk(0.0)])
+    assert not compare.compare_runs(base, same)[1]
+    _, errors = compare.compare_runs(base, broke)
+    assert len(errors) == 1
+
+
+def test_missing_metric_readable_error(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    dropped = make_artifact("toy", {}, [
+        metric("bytes", 100.0, direction="lower", noise_band=1e-3)])
+    new = _mk_run(tmp_path, "new", [dropped])
+    _, errors = compare.compare_runs(base, new)
+    assert len(errors) == 1
+    assert "speedup" in errors[0]
+    assert "missing from the new run" in errors[0]
+    assert "refresh" in errors[0]
+
+
+def test_missing_axis_readable_error(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc("a"), _mk_doc("b")])
+    new = _mk_run(tmp_path, "new", [_mk_doc("a")])
+    _, errors = compare.compare_runs(base, new)
+    assert len(errors) == 1 and "'b'" in errors[0]
+
+
+def test_new_axis_and_metric_do_not_gate(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc("a")])
+    extra = make_artifact("a", {}, [
+        metric("bytes", 100.0, direction="lower", noise_band=1e-3),
+        metric("speedup", 2.0, direction="higher", noise_band=0.05),
+        metric("brand_new", 7.0)])
+    new = _mk_run(tmp_path, "new", [extra, _mk_doc("b")])
+    rows, errors = compare.compare_runs(base, new)
+    assert not errors
+    statuses = {(r["axis"], r["metric"]): r["status"] for r in rows}
+    assert statuses[("a", "brand_new")] == "new"
+    assert statuses[("b", "(whole axis)")] == "new"
+
+
+def test_schema_version_mismatch_fails_gate(tmp_path):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    new = _mk_run(tmp_path, "new", [_mk_doc()])
+    doc = json.load(open(new / "toy.json"))
+    doc["schema_version"] = 0
+    json.dump(doc, open(new / "toy.json", "w"))
+    with pytest.raises(SchemaError, match="schema_version 0"):
+        compare.compare_runs(base, new)
+
+
+def test_band_taken_from_new_run(tmp_path):
+    # the tree under test declares its tolerance: widening the band in
+    # the new artifact lets a larger delta pass without touching the
+    # committed baseline
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    new = _mk_run(tmp_path, "new", [
+        _mk_doc(values={"bytes": 110.0, "speedup": 2.0},
+                bands={"bytes": 0.2})])
+    _, errors = compare.compare_runs(base, new)
+    assert not errors
+
+
+def test_refresh_baseline_rejects_failed_run(tmp_path):
+    run = _mk_run(tmp_path, "run", [_mk_doc()])
+    manifest = json.load(open(run / "manifest.json"))
+    manifest["failures"] = {"toy": "boom"}
+    json.dump(manifest, open(run / "manifest.json", "w"))
+    with pytest.raises(SchemaError, match="fully green"):
+        compare.refresh_baseline(run, tmp_path / "baseline")
+
+
+def test_refresh_baseline_roundtrip(tmp_path):
+    run = _mk_run(tmp_path, "run", [_mk_doc()])
+    dest = tmp_path / "baseline"
+    compare.refresh_baseline(run, dest)
+    rows, errors = compare.compare_runs(dest, run)
+    assert not errors and all(r["status"] == "ok" for r in rows)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base = _mk_run(tmp_path, "base", [_mk_doc()])
+    good = _mk_run(tmp_path, "good", [_mk_doc()])
+    bad = _mk_run(tmp_path, "bad", [
+        _mk_doc(values={"bytes": 200.0, "speedup": 2.0})])
+    assert compare.main([str(good), "--baseline", str(base)]) == 0
+    assert compare.main([str(bad), "--baseline", str(base)]) == 1
+    err = capsys.readouterr().err
+    assert "regressed" in err

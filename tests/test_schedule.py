@@ -3,6 +3,7 @@ back-compat, strategy stream capabilities, serve-path depth-k prefetch
 parity, the async pod-axis gradient-reduce stream, and the
 prefetch-aware FCDP-Cache planner."""
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -72,26 +73,38 @@ def test_systemconfig_validation():
 
 
 def test_prefetch_depth_legacy_shim():
-    """The legacy bool maps to depth 1; the `prefetch` read view stays
-    in sync (== prefetch_depth > 0); and because the bool is init-only
-    (never carried by replace()), an explicit prefetch=False reliably
-    disables the schedule even when a depth rides along."""
+    """The legacy bool maps to depth 1 WITH a DeprecationWarning (the
+    one-release migration path before the InitVar is removed); the
+    `prefetch` read view stays in sync (== prefetch_depth > 0); and
+    because the bool is init-only (never carried by replace()), an
+    explicit prefetch=False reliably disables the schedule even when a
+    depth rides along."""
     assert SystemConfig().prefetch_depth == 0
-    s = SystemConfig(prefetch=True)
+    with pytest.warns(DeprecationWarning, match="prefetch_depth"):
+        s = SystemConfig(prefetch=True)
     assert s.prefetch_depth == 1 and s.prefetch
-    s = SystemConfig(prefetch_depth=3)
+    # the depth knob itself never warns
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        s = SystemConfig(prefetch_depth=3)
+        assert s.replace(prefetch_depth=0).prefetch_depth == 0
     assert s.prefetch_depth == 3 and s.prefetch
-    assert s.replace(prefetch_depth=0).prefetch_depth == 0
     assert not s.replace(prefetch_depth=0).prefetch
     # the legacy-writer trap: toggling the bool off must actually
     # disable, not be overridden by the carried depth
-    off = s.replace(prefetch=False)
+    with pytest.warns(DeprecationWarning):
+        off = s.replace(prefetch=False)
     assert off.prefetch_depth == 0 and not off.prefetch
-    on = SystemConfig().replace(prefetch=True)
+    with pytest.warns(DeprecationWarning):
+        on = SystemConfig().replace(prefetch=True)
     assert on.prefetch_depth == 1 and on.prefetch
     # an explicit bool wins over an explicit depth in one construction
-    assert SystemConfig(prefetch=False, prefetch_depth=2).prefetch_depth == 0
-    assert SystemConfig(prefetch=True, prefetch_depth=2).prefetch_depth == 2
+    with pytest.warns(DeprecationWarning):
+        assert SystemConfig(prefetch=False,
+                            prefetch_depth=2).prefetch_depth == 0
+    with pytest.warns(DeprecationWarning):
+        assert SystemConfig(prefetch=True,
+                            prefetch_depth=2).prefetch_depth == 2
 
 
 def test_strategy_stream_capabilities():

@@ -219,8 +219,8 @@ def run_one_step(bundle):
 def test_prefetch_gating():
     """Strategy x mesh gating: prefetch needs a pod axis, a willing
     strategy, and the config flag."""
-    sys_on = SystemConfig(prefetch=True)
-    sys_off = SystemConfig(prefetch=False)
+    sys_on = SystemConfig(prefetch_depth=1)
+    sys_off = SystemConfig(prefetch_depth=0)
 
     class M3:
         axis_names = ("pod", "data", "model")
@@ -241,8 +241,9 @@ def test_prefetch_numerical_equivalence(mesh3, mode):
     step with prefetch on/off produces identical loss, grad norm, and
     updated parameters (tolerances absorb reduction-order noise)."""
     m_off, p_off = run_one_step(make_bundle(mesh3, mode=mode,
-                                            prefetch=False))
-    m_on, p_on = run_one_step(make_bundle(mesh3, mode=mode, prefetch=True))
+                                            prefetch_depth=0))
+    m_on, p_on = run_one_step(make_bundle(mesh3, mode=mode,
+                                          prefetch_depth=1))
     np.testing.assert_allclose(m_on["loss"], m_off["loss"], rtol=1e-4)
     np.testing.assert_allclose(m_on["grad_norm"], m_off["grad_norm"],
                                rtol=1e-3)
@@ -293,7 +294,8 @@ def test_prefetch_comm_structure(mesh3):
     depth (the schedule moves bytes earlier, it does not add any); the
     gradient reduce-scatter volume is identical too. MiCS is untouched
     entirely."""
-    fc_off = _collect(make_bundle(mesh3, mode="fcdp", prefetch=False))
+    fc_off = _collect(make_bundle(mesh3, mode="fcdp",
+                              prefetch_depth=0))
     for depth in (1, 2):
         fc_on = _collect(make_bundle(mesh3, mode="fcdp",
                                      prefetch_depth=depth))
@@ -304,8 +306,8 @@ def test_prefetch_comm_structure(mesh3):
             fc_on.by_op.get("psum_scatter", 0),
             fc_off.by_op.get("psum_scatter", 0), rtol=1e-6)
 
-    mi_off = _collect(make_bundle(mesh3, mode="mics", prefetch=False))
-    mi_on = _collect(make_bundle(mesh3, mode="mics", prefetch=True))
+    mi_off = _collect(make_bundle(mesh3, mode="mics", prefetch_depth=0))
+    mi_on = _collect(make_bundle(mesh3, mode="mics", prefetch_depth=1))
     assert mi_on.by_op_axis.get("all_gather/pod", 0) == 0
     np.testing.assert_allclose(mi_on.dcn_bytes, mi_off.dcn_bytes, rtol=1e-6)
     np.testing.assert_allclose(mi_on.ici_bytes, mi_off.ici_bytes, rtol=1e-6)
