@@ -1,25 +1,34 @@
 """FCDP-Comm in action: LoRA fine-tune with frozen base weights.
 
 The frozen base (99%+ of params) lives in the FCDP-Comm cached layout --
-pod-replicated, intra-sharded -- so per-iteration DCN traffic collapses
-to the adapters (the paper's 100x headline). Prints the measured
-collective-volume comparison alongside the training run.
+pod-replicated, intra-sharded, `frozen_cached` in residency terms -- so
+per-iteration DCN traffic collapses to the adapters (the paper's 100x
+headline). Prints the measured collective-volume comparison alongside
+the training run.
+
+All system knobs ride the shared launcher surface (launch/cli.py), so
+the same spellings work here as on train/dryrun/serve/bench:
 
   PYTHONPATH=src python examples/lora_finetune.py
+  PYTHONPATH=src python examples/lora_finetune.py \\
+      --lora-rank 4 --lora-alpha 8 --lora-targets wq,wv \\
+      --mode-override '*lora*=zero3'
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import argparse
 import functools
+
 import jax
 
-from repro.configs.base import (OptimizerConfig, RunConfig, ShapeCell,
-                                SystemConfig)
+from repro.configs.base import OptimizerConfig, RunConfig, ShapeCell
 from repro.configs.registry import get_smoke_config
 from repro.core.engine import StepBundle
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticPackedLM
+from repro.launch.cli import add_system_args, system_config_from_args
 from repro.launch.mesh import make_mesh
 from repro.launch.roofline import collect_collectives
 from repro.optim.adamw import init_opt_state
@@ -33,19 +42,28 @@ def measure_dcn(bundle):
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    add_system_args(ap)
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
-    cfg = get_smoke_config("qwen2.5-3b")
+    cfg = get_smoke_config(args.arch)
     cell = ShapeCell("lora", "train", 64, 8)
+    sysc = system_config_from_args(args, min_shard_size=8)
     base = RunConfig(model=cfg, shape=cell,
-                     system=SystemConfig(mode="fcdp", min_shard_size=8),
-                     optimizer=OptimizerConfig(lr=1e-3, total_steps=20,
+                     system=sysc.replace(peft=False),
+                     optimizer=OptimizerConfig(lr=1e-3,
+                                               total_steps=args.steps,
                                                warmup_steps=2))
     full = StepBundle(base, mesh)
-    lora = StepBundle(base.replace(system=base.system.replace(peft=True)),
-                      mesh)
+    # --peft is implied here: this example IS the PEFT path
+    lora = StepBundle(base.replace(system=sysc.replace(peft=True)), mesh)
     s_full, s_lora = measure_dcn(full), measure_dcn(lora)
     print(f"full-FT  DCN bytes/step/chip: {s_full.dcn_bytes:.0f}")
-    print(f"LoRA     DCN bytes/step/chip: {s_lora.dcn_bytes:.0f} "
+    print(f"LoRA r={lora.run.system.lora_rank:<3d} "
+          f"DCN bytes/step/chip: {s_lora.dcn_bytes:.0f} "
           f"({100 * (1 - s_lora.dcn_bytes / s_full.dcn_bytes):.1f}% reduction)")
     n_t = sum(lora.def_leaves[i].size() for i in lora.train_idx)
     n_all = sum(d.size() for d in lora.def_leaves)
@@ -57,7 +75,7 @@ def main():
     step = lora.make_train_step()
     loader = ShardedLoader(SyntheticPackedLM(cfg, cell, DataConfig(0)), mesh,
                            lora.batch_spec(cell))
-    for i in range(20):
+    for i in range(args.steps):
         tp, opt, m = step(tp, fp, opt, loader.get(i))
         if i % 5 == 0:
             print(f"step {i:3d} loss {float(m['loss']):.4f}")

@@ -196,6 +196,11 @@ class SystemConfig:
     peft: bool = False
     lora_rank: int = 8
     lora_targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo")
+    # LoRA alpha: the adapter term is scaled by alpha/rank. None ->
+    # alpha = 2*rank (scale 2.0). Single source of truth -- both the
+    # analytic peft accounting and models/attention.py read the scale
+    # through core.peft.lora_scale(sys).
+    lora_alpha: Optional[float] = None
     # activation checkpointing: save_all (paper-faithful torch default),
     # block_io (remat layer internals), offload_acts
     activation_policy: str = "save_all"

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional
 
 import jax
 
+from repro.core.residency import residency_of
 from repro.core.schedule import (GatherScheduler,
                                  async_buffer_bytes_by_group,
                                  async_reduce_enabled,
@@ -31,7 +32,7 @@ from repro.core.schedule import (GatherScheduler,
                                  cross_step_enabled,
                                  prefetch_buffer_bytes_by_group)
 from repro.core.strategy import (QUANT_MIN_SHARD_ELEMS, GatherPlan,
-                                 get_strategy, leaf_group)
+                                 leaf_group)
 
 HBM_PER_CHIP = 16 * 2**30          # v5e
 
@@ -135,7 +136,9 @@ def cache_bytes_per_chip(bundle, kv=None) -> Dict[str, float]:
         g = leaf_group(strategy, d)
         gb = by_group.setdefault(
             g, {"cached_bytes_per_chip": 0.0,
-                "placement": get_strategy(g).cache_placement,
+                # each group resolves to one strategy, so every leaf in
+                # it shares one residency cache tier
+                "placement": residency_of(p).cache,
                 "n_leaves": 0,
                 "prefetch_buffer_bytes_per_chip": 0.0,
                 "async_buffer_bytes_per_chip": 0.0,

@@ -14,6 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import RunConfig, ShapeCell
 from repro.core import peft as peft_mod
 from repro.core.partition import is_def, init_params, label_tree
+from repro.core.residency import split_train_indices
 from repro.core.strategy import GatherPlan, resolve_strategies, spec_axes
 from repro.models.common import MeshInfo
 from repro.models.registry import build_model
@@ -31,7 +32,7 @@ class StepBundle:
     uniform configs, a ``CompositeStrategy`` for mixed ones).
     """
 
-    def __init__(self, run: RunConfig, mesh):
+    def __init__(self, run: RunConfig, mesh, defs_fn=None):
         self.run = run
         self.mesh = mesh
         self.mi = MeshInfo.from_mesh(mesh)
@@ -43,6 +44,11 @@ class StepBundle:
         elif run.shape.kind != "train" and sys.serve_frozen:
             # serving: all weights frozen -> FCDP-Comm cached layout
             defs = peft_mod.freeze_all(defs)
+        if defs_fn is not None:
+            # caller-supplied def transform applied after the PEFT/serve
+            # classification (bench reference arms, tests): e.g. the
+            # all-trainable clone of a LoRA-injected tree
+            defs = defs_fn(defs)
         if defs is not self.model.defs:
             # injected (LoRA) or reclassified (frozen) leaves: re-label
             # and re-resolve the per-leaf strategies, then rebuild plans
@@ -59,16 +65,16 @@ class StepBundle:
         self.defs = self.model.defs
         self.def_leaves, self.treedef = jax.tree.flatten(
             self.defs, is_leaf=is_def)
-        self.train_idx = [i for i, d in enumerate(self.def_leaves)
-                          if not d.frozen]
-        self.frozen_idx = [i for i, d in enumerate(self.def_leaves)
-                           if d.frozen]
-        self.leaf_specs = [
-            self.strategy.storage_spec(d, mesh, sys.min_shard_size)
-            for d in self.def_leaves]
         # GatherPlan per leaf, aligned with def_leaves (same treedef)
         self.plan_leaves = jax.tree.leaves(
             self.model.plans, is_leaf=lambda x: isinstance(x, GatherPlan))
+        # the train/frozen split is a residency property (update class),
+        # not something the engine re-derives from ParamDef.frozen
+        self.train_idx, self.frozen_idx = split_train_indices(
+            self.plan_leaves)
+        self.leaf_specs = [
+            self.strategy.storage_spec(d, mesh, sys.min_shard_size)
+            for d in self.def_leaves]
         # Optimizer-state layout may be wider than the param layout:
         # ZeRO-2-for-experts keeps 'inter_only' (weight-resident) params
         # pod-sharded with fully sharded opt state, and the hier strategy

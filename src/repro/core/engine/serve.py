@@ -41,6 +41,27 @@ def serve_batch_dims(bundle, cell: ShapeCell,
     return cell.global_batch, P()
 
 
+def swap_adapters(bundle, params_leaves, adapter_leaves):
+    """Adapter hot-swap over one cached base model: replace ONLY the
+    trainable (adapter) leaves of a served parameter set, keeping the
+    frozen trunk's leaves -- and hence its residency (pod-replicated /
+    host-cached, zero steady-state DCN bytes) -- untouched. The swap is
+    a flat-index splice, so no base-weight gather or re-layout runs;
+    only the adapters' own (DCN-crossing) leaves are new arrays.
+
+    bundle: a PEFT StepBundle (``sys.peft=True``). params_leaves: flat
+    leaf list as the serve steps consume. adapter_leaves: new values for
+    the bundle's trainable leaves, in ``bundle.train_idx`` order."""
+    if len(adapter_leaves) != len(bundle.train_idx):
+        raise ValueError(
+            f"adapter hot-swap expects {len(bundle.train_idx)} trainable "
+            f"leaves, got {len(adapter_leaves)}")
+    out = list(params_leaves)
+    for i, v in zip(bundle.train_idx, adapter_leaves):
+        out[i] = v
+    return out
+
+
 def build_prefill_step(bundle):
     run, mesh = bundle.run, bundle.mesh
     model = bundle.model

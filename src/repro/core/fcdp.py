@@ -41,6 +41,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.compat import all_gather_invariant
 from repro.core.partition import ParamDef
+from repro.core.residency import residency_of
 from repro.core.strategy import GatherPlan, resolve_strategy
 
 try:  # name-based remat policies need the `name` primitive
@@ -65,7 +66,7 @@ def cache_name(plan: GatherPlan) -> str:
     offloads its stage-1 cache to pinned host while a mics-group expert
     in the same body recomputes its gather, without the policy knowing
     which strategy produced which mark."""
-    return f"{CACHE_NAME}:{plan.placement}"
+    return f"{CACHE_NAME}:{residency_of(plan).cache}"
 
 
 def make_gather_plan(pdef: ParamDef, mesh, mode,
@@ -130,7 +131,7 @@ def _ag_fn(plan: GatherPlan):
     serve-step output typing). Trainable params use the varying
     all-gather, whose transpose is the ZeRO-3 gradient reduce-scatter.
     """
-    if plan.frozen:
+    if residency_of(plan).invariant_gather:
         def ag(x, axes, axis):
             for a in axes:  # invariant AG takes one axis at a time
                 x = all_gather_invariant(x, a, axis=axis, tiled=True)
@@ -148,14 +149,18 @@ def gather_stage1(w: jax.Array, plan: GatherPlan) -> jax.Array:
     FCDP-Comm frozen layout). Must run inside shard_map."""
     if not plan.is_gathered or not plan.inter_axes:
         return w
-    if plan.compress_fwd and len(plan.inter_axes) == 1 and not plan.frozen:
+    # the residency layer guarantees a non-trainable leaf never carries a
+    # quantized transport (ParamResidency enforces it at construction),
+    # so the compression branches need no local frozen re-derivation
+    res = residency_of(plan)
+    if res.quantized_gather and len(plan.inter_axes) == 1:
         # qwZ: int8 blocks + fp32 scales on the DCN wire, dequantized on
         # arrival -- what lands in the (host) cache is the dequantized
         # bf16 stage-1 view, so backward reuse stays free/full-precision
         from repro.core.grad_compress import quantized_stage1_gather
         return quantized_stage1_gather(w, plan.inter_axes[0], plan.fsdp_dim,
-                                       plan.compress_bwd, plan.quant_impl)
-    if plan.compress_bwd and len(plan.inter_axes) == 1 and not plan.frozen:
+                                       res.quantized_reduce, plan.quant_impl)
+    if res.quantized_reduce and len(plan.inter_axes) == 1:
         from repro.core.grad_compress import compressed_stage1_gather
         return compressed_stage1_gather(w, plan.inter_axes[0], plan.fsdp_dim,
                                         plan.quant_impl)

@@ -15,9 +15,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import ModelConfig, SystemConfig
 from repro.core.partition import ParamDef, is_def, tree_map_defs
 
@@ -29,33 +26,52 @@ def freeze_all(defs):
     return tree_map_defs(lambda d: dataclasses.replace(d, frozen=True), defs)
 
 
+def unfreeze_all(defs):
+    """Mark every ParamDef trainable: the all-trainable reference arm
+    the PEFT bench compares against (same def tree as apply_lora's --
+    adapters included -- but every leaf receives gradient/optimizer
+    state and the full ZeRO-3-style per-step communication)."""
+    return tree_map_defs(lambda d: dataclasses.replace(d, frozen=False),
+                         defs)
+
+
 def apply_lora(defs, cfg: ModelConfig, sys: SystemConfig):
     """Freeze all base defs and inject trainable LoRA adapter defs into
-    every attention sublayer dict (keys: <target>_lora_a / _lora_b)."""
+    every sublayer dict holding a ``sys.lora_targets`` projection (keys:
+    <target>_lora_a / _lora_b).
+
+    Injection is keyed purely on target-name membership: a dict node
+    containing ANY configured target (rank >= 2 ParamDef) gets adapters
+    for every target it holds. Raises a readable error when ``peft=True``
+    finds zero injection sites (e.g. a model family whose attention
+    dicts use other projection names -- fix ``sys.lora_targets``).
+    """
     r = sys.lora_rank
+    injected = 0
 
     def visit(node):
+        nonlocal injected
         if isinstance(node, dict):
             out = {}
             for k, v in node.items():
                 out[k] = visit(v)
-            # inject adapters next to attention weights
-            if any(t in node for t in sys.lora_targets) and "wq" in node:
-                for t in sys.lora_targets:
-                    if t not in node:
-                        continue
-                    base: ParamDef = node[t]
-                    d_in, d_out = base.shape[-2], base.shape[-1]
-                    stack = base.shape[:-2]
-                    sdims = base.dims[:-2]
-                    # A: [in, r] follows the input dim's sharding role
-                    out[f"{t}_lora_a"] = ParamDef(
-                        stack + (d_in, r), sdims + (base.dims[-2], None),
-                        init="normal", init_scale=1.0)
-                    # B: [r, out] zero-init, follows the output dim's role
-                    out[f"{t}_lora_b"] = ParamDef(
-                        stack + (r, d_out), sdims + (None, base.dims[-1]),
-                        init="zeros")
+            # inject adapters next to any configured target projection
+            for t in sys.lora_targets:
+                base = node.get(t)
+                if not (is_def(base) and len(base.shape) >= 2):
+                    continue
+                d_in, d_out = base.shape[-2], base.shape[-1]
+                stack = base.shape[:-2]
+                sdims = base.dims[:-2]
+                # A: [in, r] follows the input dim's sharding role
+                out[f"{t}_lora_a"] = ParamDef(
+                    stack + (d_in, r), sdims + (base.dims[-2], None),
+                    init="normal", init_scale=1.0)
+                # B: [r, out] zero-init, follows the output dim's role
+                out[f"{t}_lora_b"] = ParamDef(
+                    stack + (r, d_out), sdims + (None, base.dims[-1]),
+                    init="zeros")
+                injected += 1
             return out
         if is_def(node):
             return dataclasses.replace(node, frozen=True)
@@ -63,16 +79,33 @@ def apply_lora(defs, cfg: ModelConfig, sys: SystemConfig):
             return type(node)(visit(v) for v in node)
         return node
 
-    return visit(defs)
+    out = visit(defs)
+    if injected == 0:
+        raise ValueError(
+            f"peft=True but no LoRA injection sites found: none of the "
+            f"configured lora_targets {sys.lora_targets!r} name a "
+            f"matrix-shaped ParamDef in any sublayer dict of this model "
+            f"family -- set SystemConfig.lora_targets to this model's "
+            f"projection names")
+    return out
 
 
 def split_frozen_indices(defs) -> Tuple[List[int], List[int]]:
-    """Flat-leaf indices of (trainable, frozen) params."""
-    leaves = jax.tree.leaves(defs, is_leaf=is_def)
-    train = [i for i, d in enumerate(leaves) if not d.frozen]
-    frozen = [i for i, d in enumerate(leaves) if d.frozen]
-    return train, frozen
+    """Flat-leaf indices of (trainable, frozen) params.
+
+    Classification delegates to the residency layer's update-class
+    helper -- the one place ``ParamDef.frozen`` is interpreted."""
+    from repro.core import residency
+    return residency.split_frozen_indices(defs)
 
 
 def lora_scale(sys: SystemConfig) -> float:
-    return 2.0  # alpha/r with alpha = 2r (common default)
+    """The adapter term's multiplier, alpha/rank.
+
+    ``SystemConfig.lora_alpha`` is the single source of truth (None ->
+    alpha = 2*rank, the common default, i.e. scale 2.0); both the
+    engine's forward (models/sublayers.py -> attention_block) and any
+    analytic accounting read the scale through here."""
+    alpha = (sys.lora_alpha if sys.lora_alpha is not None
+             else 2.0 * sys.lora_rank)
+    return alpha / sys.lora_rank

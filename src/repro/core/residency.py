@@ -1,0 +1,253 @@
+"""Parameter residency: one explicit lifecycle object per parameter.
+
+A parameter's life between two optimizer steps used to be smeared across
+``GatherPlan``'s accreted flags (``frozen``, ``placement``, the
+compress/fused booleans) plus frozen/placement special-cases re-derived
+locally in ``core/fcdp.py``, ``core/cache.py``, ``core/schedule.py`` and
+the engine's ``train_idx``/``frozen_idx`` split.  ``ParamResidency``
+makes the whole lifecycle one first-class value:
+
+  storage tier     where the authoritative bytes live between steps:
+                     'dcn_sharded'     fsdp over ('data','pod') -- the
+                                       leaf must cross DCN to be rebuilt
+                     'pod_replicated'  fsdp over intra axes only (MiCS /
+                                       hier storage, or FCDP-Comm's
+                                       frozen cached layout) -- stage 1
+                                       is structurally empty
+                     'replicated'      not fsdp-sharded at all (too
+                                       small, indivisible, or no fsdp
+                                       dim; may still be TP-sharded)
+  reconstruction   the two-stage gather schedule: ``stage1_axes`` (DCN),
+                   ``stage2_axes`` (ICI), the ``cache_after`` boundary,
+                   int8 stage-1 transport (qwZ) and collective-matmul
+                   fusion of the stage-2 gather
+  cache+backward   where the cached gather product parks between forward
+                   and backward ('regather' | 'device' | 'host') and
+                   hence what the backward reads (``backward_source``)
+  update class     'trainable' (gradient + optimizer state),
+                   'frozen' (no update, baseline layout: re-gathered
+                   over DCN every step exactly like DeepSpeed treats a
+                   frozen trunk), or
+                   'frozen_cached' (frozen under a strategy with
+                   ``frozen_cached_layout``: FCDP-Comm's permanently
+                   pod-replicated trunk -- zero steady-state DCN bytes)
+
+``core/strategy.py`` EMITS residencies (``ShardingStrategy.residency``);
+the legacy ``GatherPlan`` is derived from one and carries it as
+``plan.residency``.  Consumers -- ``cache.py`` accounting,
+``schedule.py``'s gather ring, ``engine/bundle.py``'s split/merge,
+``engine/{train,serve}.py`` -- read this surface instead of branching on
+``ParamDef.frozen`` or ``GatherPlan.placement``.
+
+Lifecycle invariants are enforced at construction: a non-trainable leaf
+never quantizes its stage-1 transport (its stage 1 runs once into the
+cached layout, not per step -- nothing to compress), never carries a
+gradient-reduce compression, and never fuses its stage-2 gather; the
+storage tier and the stage axes must agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+STORAGE_TIERS = ("dcn_sharded", "pod_replicated", "replicated")
+CACHE_TIERS = ("regather", "device", "host")
+UPDATE_CLASSES = ("trainable", "frozen", "frozen_cached")
+
+
+@dataclass(frozen=True)
+class ParamResidency:
+    """The lifecycle of one parameter leaf, as resolved by its strategy."""
+    # -- storage tier
+    tier: str                          # STORAGE_TIERS
+    # -- cache placement: where the cached gather product parks between
+    # forward and backward ('regather' recomputes instead of caching)
+    cache: str                         # CACHE_TIERS
+    # -- update class
+    update: str                        # UPDATE_CLASSES
+    # -- reconstruction schedule
+    fsdp_dim: Optional[int] = None     # dim index in the scan-body view
+    stage1_axes: Tuple[str, ...] = ()  # DCN (inter-pod) gather axes
+    stage2_axes: Tuple[str, ...] = ()  # ICI (intra-pod) gather axes
+    cache_after: int = 2               # 1 | 2: which stage's product caches
+    quantized_gather: bool = False     # qwZ int8 stage-1 transport
+    quantized_reduce: bool = False     # qgZ int8 stage-1 grad reduce
+    quant_impl: str = "jnp"
+    fused: str = "none"                # 'none' | 'ag_matmul' | 'both'
+    fused_impl: str = "jnp"
+
+    def __post_init__(self):
+        if self.tier not in STORAGE_TIERS:
+            raise ValueError(
+                f"unknown storage tier {self.tier!r}; one of {STORAGE_TIERS}")
+        if self.cache not in CACHE_TIERS:
+            raise ValueError(
+                f"unknown cache tier {self.cache!r}; one of {CACHE_TIERS}")
+        if self.update not in UPDATE_CLASSES:
+            raise ValueError(
+                f"unknown update class {self.update!r}; one of "
+                f"{UPDATE_CLASSES}")
+        if self.cache_after not in (1, 2):
+            raise ValueError(
+                f"cache_after must be 1 or 2, got {self.cache_after!r}")
+        # tier <-> schedule consistency
+        if self.stage1_axes and self.tier != "dcn_sharded":
+            raise ValueError(
+                f"tier {self.tier!r} cannot carry stage-1 (DCN) axes "
+                f"{self.stage1_axes!r}")
+        if self.tier == "dcn_sharded" and not self.stage1_axes:
+            raise ValueError(
+                "tier 'dcn_sharded' requires non-empty stage1_axes")
+        if self.tier == "pod_replicated" and not self.stage2_axes:
+            raise ValueError(
+                "tier 'pod_replicated' requires non-empty stage2_axes")
+        # (cache_after == 1 with an empty stage 1 is legal: it is the
+        # stage-1-resident view the async grad-reduce stream consumes,
+        # where the stage-1 product IS the step input -- see
+        # as_stage1_resident)
+        # frozen leaves decline every per-step transport optimization:
+        # their stage-1 (if any) is invariant and their reconstruction
+        # must stay exact -- the gating matrix the tests pin down
+        if self.update != "trainable":
+            if self.quantized_gather:
+                raise ValueError(
+                    f"{self.update!r} leaf cannot quantize its stage-1 "
+                    "gather (compress_fwd): nothing re-ships per step")
+            if self.quantized_reduce:
+                raise ValueError(
+                    f"{self.update!r} leaf cannot compress a gradient "
+                    "reduce (compress_bwd): it receives no gradient")
+            if self.fused != "none":
+                raise ValueError(
+                    f"{self.update!r} leaf cannot fuse its stage-2 gather "
+                    "into a collective matmul: frozen storage is "
+                    "pre-gathered / exact by contract")
+
+    # -- update class --------------------------------------------------------
+    @property
+    def trainable(self) -> bool:
+        return self.update == "trainable"
+
+    @property
+    def frozen(self) -> bool:
+        """Any non-trainable class (frozen or frozen_cached)."""
+        return self.update != "trainable"
+
+    @property
+    def invariant_gather(self) -> bool:
+        """Frozen leaves gather with the invariant collective (their
+        value never varies across devices or steps)."""
+        return self.frozen
+
+    # -- reconstruction ------------------------------------------------------
+    @property
+    def is_gathered(self) -> bool:
+        return self.fsdp_dim is not None and (bool(self.stage1_axes)
+                                              or bool(self.stage2_axes))
+
+    @property
+    def crosses_dcn(self) -> bool:
+        """True when rebuilding this leaf moves bytes over the slow
+        (inter-pod) tier."""
+        return bool(self.stage1_axes)
+
+    @property
+    def occupies_ring_slot(self) -> bool:
+        """Whether the streaming gather scheduler may issue this leaf's
+        stage 1 a layer ahead.  Leaves with no DCN residency (frozen
+        cached trunk, MiCS/hier storage, replicated leaves) must NOT
+        occupy ring slots: there is no stage-1 gather to overlap."""
+        return self.is_gathered and bool(self.stage1_axes)
+
+    @property
+    def backward_source(self) -> str:
+        """What the backward pass reads to rebuild the weight:
+        'resident' (never gathered), 'regather' (recompute both stages),
+        'device_cache' / 'host_cache' (re-run stage 2 from the cached
+        stage-1 shard, or read the fully-cached weight when
+        cache_after == 2)."""
+        if not self.is_gathered:
+            return "resident"
+        if self.cache == "regather":
+            return "regather"
+        return f"{self.cache}_cache"
+
+    # -- what the engine owes this leaf --------------------------------------
+    @property
+    def receives_gradient(self) -> bool:
+        return self.trainable
+
+    @property
+    def has_optimizer_state(self) -> bool:
+        return self.trainable
+
+
+# ---------------------------------------------------------------------------
+# Classification helpers (the one place the ParamDef.frozen flag is read)
+# ---------------------------------------------------------------------------
+
+def update_class(pdef, frozen_cached_layout: bool = False) -> str:
+    """Resolve a ParamDef's update class.  ``frozen_cached_layout`` is
+    the emitting strategy's attribute (FCDP-Comm stores frozen leaves
+    pre-gathered to the pod)."""
+    if not getattr(pdef, "frozen", False):
+        return "trainable"
+    return "frozen_cached" if frozen_cached_layout else "frozen"
+
+
+def split_frozen_indices(defs) -> Tuple[List[int], List[int]]:
+    """Flat-leaf indices of (trainable, frozen) ParamDefs.
+
+    This is the classification read every engine split goes through --
+    ``core/peft.py`` re-exports it for back-compat, and
+    ``engine/bundle.py`` uses the residency-carrying variant below once
+    plans exist.
+    """
+    import jax
+
+    from repro.core.partition import is_def
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    train = [i for i, d in enumerate(leaves)
+             if update_class(d) == "trainable"]
+    frozen = [i for i, d in enumerate(leaves)
+              if update_class(d) != "trainable"]
+    return train, frozen
+
+
+def split_train_indices(residencies) -> Tuple[List[int], List[int]]:
+    """Flat indices of (trainable, frozen) leaves from a residency (or
+    residency-carrying plan) leaf sequence."""
+    train, frozen = [], []
+    for i, r in enumerate(residencies):
+        res = residency_of(r)
+        (train if res.trainable else frozen).append(i)
+    return train, frozen
+
+
+def as_stage1_resident(res: ParamResidency) -> ParamResidency:
+    """The lifecycle of a leaf whose stage-1 (DCN) gather already ran
+    OUTSIDE the step body (the async grad-reduce stream differentiates
+    w.r.t. the stage-1-gathered view): no DCN axes remain, the tier is
+    what the stage-1 product is -- pod-replicated (or fully replicated
+    when there was no stage 2 to begin with) -- and there is no stage-1
+    transport left to quantize."""
+    if not res.stage1_axes:
+        return res
+    return dataclasses.replace(
+        res, stage1_axes=(),
+        tier="pod_replicated" if res.stage2_axes else "replicated",
+        quantized_gather=False)
+
+
+def residency_of(obj) -> ParamResidency:
+    """Accept a ParamResidency or anything carrying one (a GatherPlan)."""
+    if isinstance(obj, ParamResidency):
+        return obj
+    res = getattr(obj, "residency", None)
+    if res is None:
+        raise TypeError(
+            f"{type(obj).__name__} carries no ParamResidency; residency "
+            "consumers need plans emitted by ShardingStrategy.residency/"
+            "gather_plan")
+    return res

@@ -94,9 +94,16 @@ import jax.numpy as jnp
 
 from repro.core.fcdp import (_ag_fn, gather_param, gather_stage1,
                              gather_stage2)
+from repro.core.residency import as_stage1_resident, residency_of
 from repro.core.strategy import GatherPlan, leaf_group
 
 _is_plan = lambda x: isinstance(x, GatherPlan)  # noqa: E731
+
+
+def _in_ring(p) -> bool:
+    """Ring membership is a residency property: only leaves with a DCN
+    residency (a non-empty stage 1 to issue ahead) occupy ring slots."""
+    return _is_plan(p) and residency_of(p).occupies_ring_slot
 
 
 class GatherScheduler:
@@ -129,8 +136,7 @@ class GatherScheduler:
         self.strategy = strategy
         self.plans = plans
         self.plan_leaves = jax.tree.leaves(plans, is_leaf=_is_plan)
-        prefetchable = any(p.prefetchable for p in self.plan_leaves
-                           if _is_plan(p))
+        prefetchable = any(_in_ring(p) for p in self.plan_leaves)
         self.depth = (strategy.prefetch_depth(sys, mesh_like)
                       if (enabled and prefetchable) else 0)
 
@@ -187,7 +193,7 @@ class GatherScheduler:
         # is the identity on every non-ring plan.
         leaves, treedef = jax.tree.flatten(stacked_params)
         ring_ix = [i for i, p in enumerate(self.plan_leaves)
-                   if _is_plan(p) and p.prefetchable]
+                   if _in_ring(p)]
         dir_ix = [i for i in range(len(leaves)) if i not in set(ring_ix)]
         ring_plans = [self.plan_leaves[i] for i in ring_ix]
 
@@ -266,7 +272,9 @@ def stage1_resident_plans(plans):
     def strip(p):
         if not (_is_plan(p) and p.inter_axes):
             return p
-        return dataclasses.replace(p, inter_axes=())
+        return dataclasses.replace(
+            p, inter_axes=(),
+            residency=as_stage1_resident(residency_of(p)))
     return jax.tree.map(strip, plans, is_leaf=_is_plan)
 
 
@@ -279,7 +287,10 @@ def leaf_stage1(w: jax.Array, pdef, plan: GatherPlan) -> jax.Array:
     ARCHITECTURE.md §Quantized collectives)."""
     if not (plan.is_gathered and plan.inter_axes):
         return w
-    if plan.compress_fwd and len(plan.inter_axes) == 1 and not plan.frozen:
+    # residency guarantees quantized_gather is never set on a frozen
+    # leaf, so no local frozen re-derivation is needed here
+    if (residency_of(plan).quantized_gather
+            and len(plan.inter_axes) == 1):
         from repro.core.grad_compress import quantized_stage1_gather
         # not differentiated here (the async schedule differentiates
         # w.r.t. the gathered view); the exact-bwd variant is fine
@@ -331,7 +342,7 @@ def async_buffer_bytes_by_group(strategy, def_leaves, plan_leaves,
             continue
         view = strategy.cached_bytes_for(d, p, mi)
         total = view                         # gathered param view
-        if not d.frozen:
+        if residency_of(p).receives_gradient:
             total += view                    # in-flight grad buffer
         g = leaf_group(strategy, d)
         out[g] = out.get(g, 0.0) + total
@@ -379,7 +390,7 @@ def cross_step_buffer_bytes_by_group(strategy, def_leaves, plan_leaves,
     import math
     out: dict = {}
     for d, p in zip(def_leaves, plan_leaves):
-        if not _is_plan(p) or d.frozen:
+        if not _is_plan(p) or not residency_of(p).trainable:
             continue
         shard = _leaf_shard_bytes(d, p, mi)
         inter_deg = 1
@@ -411,7 +422,7 @@ def prefetch_buffer_bytes_by_group(strategy, def_leaves, plan_leaves, mi,
     if depth <= 0:
         return out
     for d, p in zip(def_leaves, plan_leaves):
-        if not (_is_plan(p) and p.prefetchable):
+        if not _in_ring(p):
             continue
         if "stack" not in d.dims:
             continue

@@ -51,6 +51,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple, Type, Union
 
 from jax.sharding import PartitionSpec as P
 
+from repro.core.residency import ParamResidency, update_class
 from repro.launch.mesh import fsdp_axes, intra_fsdp_axes
 
 INTER_AXIS = "pod"     # the slow (DCN) mesh axis name
@@ -79,7 +80,12 @@ def spec_axes(spec: P) -> set:
 
 @dataclass(frozen=True)
 class GatherPlan:
-    """How one parameter is reconstructed inside the step function."""
+    """Thin derived view of a :class:`ParamResidency` -- the legacy
+    surface older call sites (and tests) read.  The lifecycle decisions
+    live on ``self.residency``; every field here is derived from it by
+    :meth:`from_residency`, and consumers outside strategy/residency
+    must branch on the residency, never on ``frozen``/``placement``
+    directly."""
     fsdp_dim: Optional[int]          # dim index *inside the scan body*
     inter_axes: Tuple[str, ...]      # stage-1 axes (DCN)
     intra_axes: Tuple[str, ...]      # stage-2 axes (ICI)
@@ -104,6 +110,18 @@ class GatherPlan:
     # checkpointed layer body (core/fcdp.py keys the remat policy on a
     # placement-suffixed checkpoint_name): 'regather' | 'device' | 'host'
     placement: str = "regather"
+    # the authoritative lifecycle this plan is a view of
+    residency: Optional[ParamResidency] = None
+
+    @classmethod
+    def from_residency(cls, res: ParamResidency) -> "GatherPlan":
+        return cls(res.fsdp_dim, res.stage1_axes, res.stage2_axes,
+                   res.cache_after, frozen=res.frozen,
+                   compress_bwd=res.quantized_reduce,
+                   compress_fwd=res.quantized_gather,
+                   quant_impl=res.quant_impl, fused=res.fused,
+                   fused_impl=res.fused_impl, placement=res.cache,
+                   residency=res)
 
     @property
     def is_gathered(self) -> bool:
@@ -228,30 +246,37 @@ class ShardingStrategy:
         widened = storage + tuple(a for a in target if a not in storage)
         return self._spec_with_axes(full, mesh, widened, min_shard_size)
 
-    # -- gather schedule ----------------------------------------------------
-    def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
-                    compress_bwd: bool = False,
-                    param_compress: bool = False,
-                    quant_impl: str = "jnp",
-                    fused_matmul: str = "none",
-                    fused_impl: str = "jnp") -> GatherPlan:
-        """Derive the two-stage gather plan matching ``storage_spec``.
+    # -- residency / gather schedule ----------------------------------------
+    def residency(self, pdef, mesh, min_shard_size: int = 0,
+                  compress_bwd: bool = False,
+                  param_compress: bool = False,
+                  quant_impl: str = "jnp",
+                  fused_matmul: str = "none",
+                  fused_impl: str = "jnp") -> ParamResidency:
+        """Emit the full parameter lifecycle matching ``storage_spec``.
 
-        If the def carries a 'stack' (scan) dimension, the returned fsdp
-        dim index is shifted to the *scan-body* view (stack dim consumed
-        by scan).
+        This is the ONE place a leaf's storage tier, reconstruction
+        schedule, backward source, and update class are decided; the
+        legacy :class:`GatherPlan` is derived from the result.  If the
+        def carries a 'stack' (scan) dimension, the emitted fsdp dim
+        index is shifted to the *scan-body* view (stack dim consumed by
+        scan).
         """
+        upd = update_class(pdef, self.frozen_cached_layout)
         d = pdef.fsdp_dim
         if d is None or pdef.size() < min_shard_size:
-            return GatherPlan(None, (), (), 2, pdef.frozen,
-                              placement=self.cache_placement)
+            return ParamResidency("replicated", self.cache_placement, upd,
+                                  quant_impl=quant_impl,
+                                  fused_impl=fused_impl)
         axes = self.effective_fsdp_axes(pdef, mesh)
         degree = math.prod(mesh.shape[a] for a in axes) if axes else 1
         if not axes or pdef.shape[d] % degree != 0:
-            return GatherPlan(None, (), (), 2, pdef.frozen,
-                              placement=self.cache_placement)
+            return ParamResidency("replicated", self.cache_placement, upd,
+                                  quant_impl=quant_impl,
+                                  fused_impl=fused_impl)
         inter = tuple(a for a in axes if a == INTER_AXIS)
         intra = tuple(a for a in axes if a != INTER_AXIS)
+        tier = "dcn_sharded" if inter else "pod_replicated"
         # cache boundary: after the inter stage if one exists, else after
         # the full gather (single-pod / pod-replicated storage).
         cache_after = 1 if inter else 2
@@ -264,7 +289,8 @@ class ShardingStrategy:
         # (the padded block + scale would cost more wire than bf16)
         stack = (pdef.shape[pdef.dims.index("stack")]
                  if "stack" in pdef.dims else 1)
-        quantizable = (bool(inter) and not pdef.frozen
+        trainable = upd == "trainable"
+        quantizable = (bool(inter) and trainable
                        and pdef.size() // (degree * stack)
                        >= QUANT_MIN_SHARD_ELEMS)
         # gather-fused collective matmul eligibility: the def site must
@@ -284,17 +310,31 @@ class ShardingStrategy:
                    and self.supports_fused_matmul
                    and getattr(pdef, "fusable", False)
                    and body_rank == 2 and body_dim == 1
-                   and not pdef.frozen
+                   and trainable
                    and len(intra) == 1 and intra_deg > 1
                    and (cache_after == 1 or self.cache_placement == "regather"))
-        return GatherPlan(body_dim, inter, intra, cache_after, pdef.frozen,
-                          compress_bwd=(compress_bwd and quantizable),
-                          compress_fwd=(param_compress and quantizable
-                                        and self.supports_quantized_gather),
-                          quant_impl=quant_impl,
-                          fused=(fused_matmul if fusable else "none"),
-                          fused_impl=fused_impl,
-                          placement=self.cache_placement)
+        return ParamResidency(
+            tier, self.cache_placement, upd,
+            fsdp_dim=body_dim, stage1_axes=inter, stage2_axes=intra,
+            cache_after=cache_after,
+            quantized_gather=(param_compress and quantizable
+                              and self.supports_quantized_gather),
+            quantized_reduce=(compress_bwd and quantizable),
+            quant_impl=quant_impl,
+            fused=(fused_matmul if fusable else "none"),
+            fused_impl=fused_impl)
+
+    def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
+                    compress_bwd: bool = False,
+                    param_compress: bool = False,
+                    quant_impl: str = "jnp",
+                    fused_matmul: str = "none",
+                    fused_impl: str = "jnp") -> GatherPlan:
+        """Back-compat view: derive the two-stage gather plan from the
+        leaf's emitted :class:`ParamResidency`."""
+        return GatherPlan.from_residency(self.residency(
+            pdef, mesh, min_shard_size, compress_bwd, param_compress,
+            quant_impl, fused_matmul, fused_impl))
 
     def plan_tree(self, defs, mesh, min_shard_size: int = 0,
                   compress_bwd: bool = False, param_compress: bool = False,
@@ -520,17 +560,28 @@ class CompositeStrategy(ShardingStrategy):
     def opt_spec(self, pdef, mesh, min_shard_size: int = 0) -> P:
         return self._for(pdef).opt_spec(pdef, mesh, min_shard_size)
 
+    def residency(self, pdef, mesh, min_shard_size: int = 0,
+                  compress_bwd: bool = False,
+                  param_compress: bool = False,
+                  quant_impl: str = "jnp",
+                  fused_matmul: str = "none",
+                  fused_impl: str = "jnp") -> ParamResidency:
+        # per-leaf dispatch also gates qwZ and the fused collective
+        # matmul per group: the leaf strategy's own
+        # supports_quantized_gather / supports_fused_matmul decide, so a
+        # declining group keeps its exact bf16 stage-1 gather (or its
+        # unfused stage-2 gather) inside a mixed bundle
+        return self._for(pdef).residency(pdef, mesh, min_shard_size,
+                                         compress_bwd, param_compress,
+                                         quant_impl, fused_matmul,
+                                         fused_impl)
+
     def gather_plan(self, pdef, mesh, min_shard_size: int = 0,
                     compress_bwd: bool = False,
                     param_compress: bool = False,
                     quant_impl: str = "jnp",
                     fused_matmul: str = "none",
                     fused_impl: str = "jnp") -> GatherPlan:
-        # per-leaf dispatch also gates qwZ and the fused collective
-        # matmul per group: the leaf strategy's own
-        # supports_quantized_gather / supports_fused_matmul decide, so a
-        # declining group keeps its exact bf16 stage-1 gather (or its
-        # unfused stage-2 gather) inside a mixed bundle
         return self._for(pdef).gather_plan(pdef, mesh, min_shard_size,
                                            compress_bwd, param_compress,
                                            quant_impl, fused_matmul,
@@ -695,7 +746,7 @@ def normalize_mode_overrides(
     return tuple(rules)
 
 
-def resolve_strategies(sys, defs):
+def resolve_strategies(sys, defs, *, strict: bool = True):
     """Resolve the per-leaf strategy assignment of a labeled ParamDef tree.
 
     Resolution order per leaf: explicit ``ParamDef.strategy`` tag >
@@ -707,12 +758,17 @@ def resolve_strategies(sys, defs):
     is tagged with its resolved name and a :class:`CompositeStrategy`
     over the present groups is returned.
 
-    Raises ``ValueError`` naming the offending rule when an override
-    rule is the first rule-match for zero parameter labels (catches
-    typo'd globs at construction time). Hit accounting is label-only:
-    explicit tags shadow a rule for assignment without invalidating it,
-    so re-resolving an already-tagged tree (the PEFT path re-labels
-    after injecting adapter leaves) stays stable.
+    With ``strict`` (the default), raises ``ValueError`` naming the
+    offending rule when an override rule is the first rule-match for
+    zero parameter labels (catches typo'd globs at construction time).
+    Model construction under ``peft=True`` passes ``strict=False``: the
+    base tree is resolved before LoRA injection, so a rule targeting
+    the adapters (e.g. ``'*lora*'``) legitimately matches nothing yet --
+    the StepBundle re-resolution after ``apply_lora`` runs strict and
+    is where a genuinely dead rule still raises. Hit accounting is
+    label-only: explicit tags shadow a rule for assignment without
+    invalidating it, so re-resolving an already-tagged tree stays
+    stable.
     """
     import jax
 
@@ -738,7 +794,7 @@ def resolve_strategies(sys, defs):
             name = rule_name or default.name
         tagged.append(dataclasses.replace(d, strategy=name))
     for (pattern, mode), n in zip(rules, hits):
-        if n == 0:
+        if n == 0 and strict:
             raise ValueError(
                 f"mode_overrides rule {pattern!r}={mode!r} matched zero "
                 "parameters (patterns are fnmatch globs against dotted "

@@ -25,7 +25,8 @@ from repro.core.strategy import (DEFAULT_STRATEGY, parse_mode_override,
                                  strategy_names)
 
 # flags whose argparse dest maps 1:1 onto a SystemConfig field
-_PASSTHROUGH = ("mode", "peft", "activation_policy", "loss_chunk",
+_PASSTHROUGH = ("mode", "peft", "lora_rank", "lora_alpha",
+                "activation_policy", "loss_chunk",
                 "grad_compress", "param_compress", "quant_impl",
                 "fused_matmul", "fused_impl", "async_grad_reduce",
                 "cross_step_pipeline", "device_cache_fraction")
@@ -75,6 +76,15 @@ def add_system_args(parser: argparse.ArgumentParser, *,
     g.add_argument("--peft", action="store_true",
                    help="FCDP-Comm: freeze the trunk, train LoRA "
                         "adapters, communicate only trainables over DCN")
+    g.add_argument("--lora-rank", type=int, default=8,
+                   help="LoRA adapter rank r (with --peft)")
+    g.add_argument("--lora-alpha", type=float, default=None,
+                   help="LoRA alpha; the adapter term is scaled by "
+                        "alpha/rank (default: 2*rank, i.e. scale 2.0)")
+    g.add_argument("--lora-targets", default=None,
+                   metavar="NAME[,NAME...]",
+                   help="comma-separated projection names to inject "
+                        "adapters into (default: wq,wk,wv,wo)")
     g.add_argument("--activation-policy", default="save_all",
                    choices=ACTIVATION_POLICIES)
     g.add_argument("--loss-chunk", type=int, default=0,
@@ -112,5 +122,8 @@ def system_config_from_args(args: argparse.Namespace,
     kw["mode_overrides"] = tuple(parse_mode_override(s)
                                  for s in args.mode_override)
     kw["prefetch_depth"] = args.prefetch_depth
+    if getattr(args, "lora_targets", None):
+        kw["lora_targets"] = tuple(
+            t.strip() for t in args.lora_targets.split(",") if t.strip())
     kw.update(overrides)
     return SystemConfig(**kw)

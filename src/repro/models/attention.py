@@ -151,6 +151,10 @@ def attention_block(x, wq, wk, wv, wo, bq, bk, bv, cfg, mi: MeshInfo,
                     kv_cache: Optional[Tuple] = None,
                     paged_kv: Optional[Tuple] = None,
                     q_norm=None, k_norm=None, lora=None,
+                    # adapter scale alpha/rank: callers thread the
+                    # resolved value from core.peft.lora_scale(sys)
+                    # (source of truth: SystemConfig.lora_alpha); the
+                    # default only covers direct lora-less unit calls
                     lora_alpha: float = 2.0, causal: bool = True):
     """Full attention sublayer on local shards.
 

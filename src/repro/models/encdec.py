@@ -37,7 +37,8 @@ class EncDec:
         self.vpad = pad_vocab(cfg.vocab_size, self.mi.tp)
         # labels first, then per-leaf strategy resolution (see models/lm.py)
         self._defs, self.strategy = resolve_strategies(
-            sys, label_tree(self._build_defs()))
+            sys, label_tree(self._build_defs()),
+            strict=not sys.peft)  # adapter-targeting rules match post-injection
         self._plans = self.strategy.plan_tree(
             self._defs, mesh, sys.min_shard_size,
             compress_bwd=(sys.grad_compress == "int8_pod"),

@@ -54,7 +54,8 @@ class LM:
         # per-leaf strategy resolution (ParamDef tag > mode_overrides >
         # mode); uniform configs get the plain singleton strategy back
         self._defs, self.strategy = resolve_strategies(
-            sys, label_tree(self._build_defs()))
+            sys, label_tree(self._build_defs()),
+            strict=not sys.peft)  # adapter-targeting rules match post-injection
         self._plans = self.strategy.plan_tree(
             self._defs, mesh, sys.min_shard_size,
             compress_bwd=(sys.grad_compress == "int8_pod"),

@@ -60,18 +60,28 @@ def attn_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
     return out
 
 
+def _lora_kwargs(sys, p) -> Dict[str, Any]:
+    """Adapter leaves riding in the sublayer dict + the alpha/rank scale
+    (single source of truth: SystemConfig.lora_alpha via
+    core.peft.lora_scale)."""
+    lora = {k: v for k, v in p.items() if "_lora_" in k} or None
+    if lora is None:
+        return {}
+    from repro.core.peft import lora_scale
+    return {"lora": lora, "lora_alpha": lora_scale(sys)}
+
+
 def attn_apply(cfg, sys: SystemConfig, mi: MeshInfo, p, x, positions,
                causal: bool = True, kv_cache=None, xa_kv=None):
     from repro.models.common import tp_region_in
     h = tp_region_in(rms_norm(x, p["norm"], cfg.norm_eps), mi)
-    lora = {k: v for k, v in p.items() if "_lora_" in k} or None
     y, new_cache = attn_mod.attention_block(
         h, p["wq"], p["wk"], p["wv"], p["wo"],
         p.get("bq"), p.get("bk"), p.get("bv"),
         cfg, mi, positions, attn_impl=getattr(sys, "attn_impl", "jnp"),
         kv_cache=kv_cache,
-        q_norm=p.get("q_norm"), k_norm=p.get("k_norm"), lora=lora,
-        causal=causal)
+        q_norm=p.get("q_norm"), k_norm=p.get("k_norm"),
+        causal=causal, **_lora_kwargs(sys, p))
     return x + y, new_cache
 
 
@@ -135,7 +145,8 @@ def attn_paged(cfg, sys, mi: MeshInfo, p, x, state, positions, table,
         h, p["wq"], p["wk"], p["wv"], p["wo"],
         p.get("bq"), p.get("bk"), p.get("bv"), cfg, mi, positions,
         paged_kv=(state["k"], state["v"], table),
-        q_norm=p.get("q_norm"), k_norm=p.get("k_norm"))
+        q_norm=p.get("q_norm"), k_norm=p.get("k_norm"),
+        **_lora_kwargs(sys, p))
     return x + y, {"k": pk, "v": pv}
 
 
@@ -148,7 +159,8 @@ def attn_decode(cfg, sys, mi: MeshInfo, p, x, state, seq_sharded: bool = False):
         y, (k_new, v_new, idx_new) = attn_mod.attention_block(
             h, p["wq"], p["wk"], p["wv"], p["wo"],
             p.get("bq"), p.get("bk"), p.get("bv"), cfg, mi, pos,
-            kv_cache=kv, q_norm=p.get("q_norm"), k_norm=p.get("k_norm"))
+            kv_cache=kv, q_norm=p.get("q_norm"), k_norm=p.get("k_norm"),
+            **_lora_kwargs(sys, p))
         return x + y, {"k": k_new, "v": v_new, "idx": idx_new}
     # sequence-sharded cache (long_500k): write lands on owner shard
     h = rms_norm(x, p["norm"], cfg.norm_eps)

@@ -1,0 +1,394 @@
+"""Parameter-residency layer tests: the one lifecycle model for
+frozen/cached/trainable leaves.
+
+Pins: ParamResidency construction invariants and the frozen gating
+matrix (non-trainable leaves decline compress_fwd / compress_bwd /
+fused across EVERY registered strategy and across composite groups),
+split stability under LoRA injection + re-resolution, ring-slot
+exclusion for leaves with no DCN residency, the deferred zero-match
+validation of adapter-targeting mode_overrides, mixed composite PEFT
+training, serve-side adapter hot-swap, and -- statically, via ast --
+that no consumer outside core/strategy.py + core/residency.py reads
+``ParamDef.frozen`` or ``GatherPlan.placement`` directly."""
+import ast
+import dataclasses
+import functools
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                ShapeCell, SystemConfig)
+from repro.core.engine import StepBundle
+from repro.core.partition import ParamDef, is_def, label_tree
+from repro.core.residency import (ParamResidency, as_stage1_resident,
+                                  residency_of, split_frozen_indices,
+                                  update_class)
+from repro.core.strategy import (get_strategy, leaf_group,
+                                 resolve_strategies, strategy_names)
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=2, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+CELL = ShapeCell("t", "train", 64, 8)
+DEC_CELL = ShapeCell("t", "decode", 128, 8)
+
+# big enough that every strategy shards it and qwZ would apply to the
+# trainable twin (shard >= QUANT_MIN_SHARD_ELEMS)
+BIG = dict(shape=(4096, 64), dims=("fsdp", "tp"))
+
+
+def peft_bundle(mesh, mode="fcdp", cell=CELL, overrides=(), defs_fn=None,
+                **sys_kw):
+    sysd = dict(mode=mode, min_shard_size=8, peft=True, lora_rank=2,
+                mode_overrides=overrides)
+    sysd.update(sys_kw)
+    run = RunConfig(model=DENSE, shape=cell, system=SystemConfig(**sysd),
+                    optimizer=OptimizerConfig(total_steps=8, warmup_steps=2,
+                                              lr=1e-3))
+    return StepBundle(run, mesh, defs_fn=defs_fn)
+
+
+# ---------------------------------------------------------------------------
+# ParamResidency construction invariants
+# ---------------------------------------------------------------------------
+
+def test_construction_rejects_unknown_enums():
+    with pytest.raises(ValueError, match="storage tier"):
+        ParamResidency("gpu", "regather", "trainable")
+    with pytest.raises(ValueError, match="cache tier"):
+        ParamResidency("replicated", "ssd", "trainable")
+    with pytest.raises(ValueError, match="update class"):
+        ParamResidency("replicated", "regather", "thawed")
+    with pytest.raises(ValueError, match="cache_after"):
+        ParamResidency("dcn_sharded", "regather", "trainable",
+                       fsdp_dim=0, stage1_axes=("pod",), cache_after=3)
+
+
+def test_construction_tier_axes_consistency():
+    # stage-1 axes demand the dcn_sharded tier and vice versa
+    with pytest.raises(ValueError, match="stage-1"):
+        ParamResidency("pod_replicated", "regather", "trainable",
+                       fsdp_dim=0, stage1_axes=("pod",),
+                       stage2_axes=("data",))
+    with pytest.raises(ValueError, match="stage1_axes"):
+        ParamResidency("dcn_sharded", "regather", "trainable", fsdp_dim=0)
+    with pytest.raises(ValueError, match="stage2_axes"):
+        ParamResidency("pod_replicated", "regather", "trainable",
+                       fsdp_dim=0)
+
+
+def test_construction_frozen_gating():
+    """The gating matrix at the type level: any non-trainable update
+    class rejects per-step transport optimizations outright."""
+    for upd in ("frozen", "frozen_cached"):
+        with pytest.raises(ValueError, match="compress_fwd"):
+            ParamResidency("dcn_sharded", "regather", upd, fsdp_dim=0,
+                           stage1_axes=("pod",), quantized_gather=True)
+        with pytest.raises(ValueError, match="compress_bwd"):
+            ParamResidency("dcn_sharded", "regather", upd, fsdp_dim=0,
+                           stage1_axes=("pod",), quantized_reduce=True)
+        with pytest.raises(ValueError, match="fuse"):
+            ParamResidency("pod_replicated", "host", upd, fsdp_dim=0,
+                           stage2_axes=("data",), fused="ag_matmul")
+
+
+def test_stage1_resident_view():
+    res = ParamResidency("dcn_sharded", "host", "trainable", fsdp_dim=0,
+                         stage1_axes=("pod",), stage2_axes=("data",),
+                         cache_after=1, quantized_gather=True)
+    s1 = as_stage1_resident(res)
+    assert s1.stage1_axes == ()
+    assert s1.tier == "pod_replicated"
+    assert not s1.quantized_gather            # nothing left to quantize
+    assert not s1.occupies_ring_slot
+    assert as_stage1_resident(s1) is s1       # idempotent
+    # no stage 2 at all -> the stage-1 product is the full weight
+    res2 = ParamResidency("dcn_sharded", "regather", "trainable",
+                          fsdp_dim=0, stage1_axes=("pod",), cache_after=1)
+    assert as_stage1_resident(res2).tier == "replicated"
+
+
+def test_residency_of_rejects_bare_objects():
+    with pytest.raises(TypeError, match="ParamResidency"):
+        residency_of(object())
+
+
+# ---------------------------------------------------------------------------
+# The frozen gating matrix across every registered strategy + composite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", strategy_names())
+def test_frozen_declines_transport_optimizations(name, mesh3):
+    """A frozen leaf emitted by ANY strategy declines qwZ (compress_fwd),
+    qgZ (compress_bwd) and the fused collective matmul, even when the
+    config asks for all three; its trainable twin under a DCN-crossing
+    strategy accepts qwZ/qgZ."""
+    s = get_strategy(name)
+    frozen = ParamDef(frozen=True, **BIG)
+    r = s.residency(frozen, mesh3, 8, compress_bwd=True,
+                    param_compress=True, fused_matmul="ag_matmul")
+    assert r.frozen and not r.trainable
+    assert not r.quantized_gather
+    assert not r.quantized_reduce
+    assert r.fused == "none"
+    assert not r.receives_gradient and not r.has_optimizer_state
+    twin = s.residency(ParamDef(frozen=False, **BIG), mesh3, 8,
+                       compress_bwd=True, param_compress=True)
+    assert twin.trainable
+    if twin.crosses_dcn and s.supports_quantized_gather:
+        assert twin.quantized_gather and twin.quantized_reduce
+
+
+def test_frozen_gating_across_composite_groups(mesh3):
+    """CompositeStrategy dispatches residency per leaf group; frozen
+    leaves decline the optimizations inside every group."""
+    defs = {
+        "a": ParamDef(strategy="fcdp", frozen=True, **BIG),
+        "b": ParamDef(strategy="zero3", frozen=True, **BIG),
+        "c": ParamDef(strategy="zero3", frozen=False, **BIG),
+    }
+    sys = SystemConfig(mode="fcdp", min_shard_size=8)
+    defs, strat = resolve_strategies(sys, label_tree(defs))
+    for k in ("a", "b"):
+        r = strat.residency(defs[k], mesh3, 8, compress_bwd=True,
+                            param_compress=True, fused_matmul="ag_matmul")
+        assert r.frozen and not r.quantized_gather
+        assert not r.quantized_reduce and r.fused == "none"
+    # the trainable zero3 leaf in the same bundle still quantizes
+    r = strat.residency(defs["c"], mesh3, 8, compress_bwd=True,
+                        param_compress=True)
+    assert r.trainable and r.quantized_gather and r.quantized_reduce
+
+
+def test_residency_emission_matrix(mesh3):
+    """Tier x cache x update per strategy for the frozen leaf -- the
+    asymmetry the PEFT DCN-reduction claim rests on: zero3 keeps a
+    frozen trunk dcn_sharded (re-gathered over DCN every step, the
+    DeepSpeed baseline), fcdp parks it pod-replicated/host-cached with
+    an empty stage 1."""
+    frozen = ParamDef(frozen=True, **BIG)
+    z = get_strategy("zero3").residency(frozen, mesh3, 8)
+    assert (z.tier, z.update) == ("dcn_sharded", "frozen")
+    assert z.crosses_dcn and z.occupies_ring_slot
+    f = get_strategy("fcdp").residency(frozen, mesh3, 8)
+    assert (f.tier, f.cache, f.update) == ("pod_replicated", "host",
+                                           "frozen_cached")
+    assert f.stage1_axes == () and not f.crosses_dcn
+    assert not f.occupies_ring_slot
+    assert f.backward_source == "host_cache"
+
+
+# ---------------------------------------------------------------------------
+# Split stability under LoRA injection + re-resolution
+# ---------------------------------------------------------------------------
+
+def test_split_stable_under_lora_and_reresolution(mesh3):
+    b = peft_bundle(mesh3)
+    labels = [d.label for d in b.def_leaves]
+    assert all("_lora_" in labels[i] for i in b.train_idx)
+    assert not any("_lora_" in labels[i] for i in b.frozen_idx)
+    assert sorted(b.train_idx + b.frozen_idx) == list(range(len(labels)))
+    # def-level classification (peft split) agrees with the
+    # residency-level split the engine uses
+    assert split_frozen_indices(b.defs) == (b.train_idx, b.frozen_idx)
+    # re-resolving the already-tagged tree must not move a single leaf
+    defs2, strat2 = resolve_strategies(b.run.system, label_tree(b.defs))
+    assert split_frozen_indices(defs2) == (b.train_idx, b.frozen_idx)
+    leaves2 = jax.tree.leaves(defs2, is_leaf=is_def)
+    assert [d.label for d in leaves2] == labels
+
+
+def test_update_class_resolution():
+    d = ParamDef((8, 8), (None, None))
+    assert update_class(d) == "trainable"
+    f = dataclasses.replace(d, frozen=True)
+    assert update_class(f) == "frozen"
+    assert update_class(f, frozen_cached_layout=True) == "frozen_cached"
+
+
+# ---------------------------------------------------------------------------
+# Ring-slot exclusion: no DCN residency -> no ring slot
+# ---------------------------------------------------------------------------
+
+def test_frozen_cached_leaves_leave_the_ring(mesh3):
+    """fcdp's frozen trunk has no stage-1 gather to overlap, so the
+    streaming scheduler must not spend ring slots (or depth) on it;
+    zero3's frozen trunk stays in the ring -- it still crosses DCN."""
+    bf = peft_bundle(mesh3, "fcdp", prefetch_depth=1)
+    for i in bf.frozen_idx:
+        assert not residency_of(bf.plan_leaves[i]).occupies_ring_slot
+    bz = peft_bundle(mesh3, "zero3", prefetch_depth=1)
+    assert any(residency_of(bz.plan_leaves[i]).occupies_ring_slot
+               for i in bz.frozen_idx)
+
+
+# ---------------------------------------------------------------------------
+# Adapter-targeting mode_overrides: deferred zero-match validation
+# ---------------------------------------------------------------------------
+
+def test_lora_override_rule_resolves_after_injection(mesh3):
+    """'*lora*' matches nothing on the base tree (pre-injection) --
+    construction must NOT reject it under peft=True; after apply_lora
+    the adapters land in their own group."""
+    b = peft_bundle(mesh3, overrides=(("*lora*", "zero3"),))
+    groups = {leaf_group(b.strategy, d) for d in b.def_leaves}
+    assert groups == {"fcdp", "zero3"}
+    for i in b.train_idx:
+        assert leaf_group(b.strategy, b.def_leaves[i]) == "zero3"
+    for i in b.frozen_idx:
+        assert leaf_group(b.strategy, b.def_leaves[i]) == "fcdp"
+
+
+def test_dead_rule_still_raises_under_peft(mesh3):
+    # a rule that matches nothing even after injection is a typo'd glob
+    with pytest.raises(ValueError, match="matched zero"):
+        peft_bundle(mesh3, overrides=(("*no_such_param*", "zero3"),))
+
+
+def test_lora_rule_without_peft_raises_at_construction(mesh3):
+    run = RunConfig(model=DENSE, shape=CELL,
+                    system=SystemConfig(mode="fcdp", min_shard_size=8,
+                                        mode_overrides=(("*lora*",
+                                                         "zero3"),)))
+    with pytest.raises(ValueError, match="matched zero"):
+        StepBundle(run, mesh3)
+
+
+# ---------------------------------------------------------------------------
+# apply_lora keying + lora_scale source of truth
+# ---------------------------------------------------------------------------
+
+def test_apply_lora_keys_on_configured_targets():
+    from repro.core.peft import apply_lora
+    d = ParamDef((64, 64), ("fsdp", "tp"))
+    defs = {"attn": {"w_out": d, "gate": ParamDef((64,), (None,))}}
+    sys = SystemConfig(peft=True, lora_rank=2, lora_targets=("w_out",))
+    out = apply_lora(defs, DENSE, sys)
+    assert set(out["attn"]) == {"w_out", "w_out_lora_a", "w_out_lora_b",
+                                "gate"}
+    assert out["attn"]["w_out"].frozen
+    assert not out["attn"]["w_out_lora_a"].frozen
+    assert out["attn"]["w_out_lora_b"].init == "zeros"
+    # 1-D leaves are never injection sites even when named as a target
+    sys1 = SystemConfig(peft=True, lora_rank=2,
+                        lora_targets=("w_out", "gate"))
+    out1 = apply_lora(defs, DENSE, sys1)
+    assert "gate_lora_a" not in out1["attn"]
+
+
+def test_apply_lora_zero_sites_raises_readably():
+    from repro.core.peft import apply_lora
+    defs = {"attn": {"wq": ParamDef((64, 64), ("fsdp", "tp"))}}
+    sys = SystemConfig(peft=True, lora_rank=2,
+                       lora_targets=("proj_q", "proj_k"))
+    with pytest.raises(ValueError, match="lora_targets"):
+        apply_lora(defs, DENSE, sys)
+
+
+def test_lora_scale_single_source_of_truth():
+    from repro.core.peft import lora_scale
+    assert lora_scale(SystemConfig(peft=True, lora_rank=8)) == 2.0
+    assert lora_scale(SystemConfig(peft=True, lora_rank=4)) == 2.0
+    assert lora_scale(SystemConfig(peft=True, lora_rank=8,
+                                   lora_alpha=16.0)) == 2.0
+    assert lora_scale(SystemConfig(peft=True, lora_rank=8,
+                                   lora_alpha=4.0)) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Mixed composite PEFT bundle trains
+# ---------------------------------------------------------------------------
+
+def test_mixed_composite_peft_trains(mesh3):
+    from repro.core.cache import cache_bytes_per_chip
+    from repro.optim.adamw import init_opt_state
+    b = peft_bundle(mesh3, overrides=(("*lora*", "zero3"),))
+    acct = cache_bytes_per_chip(b)
+    assert set(acct["by_group"]) == {"fcdp", "zero3"}
+    rng = np.random.default_rng(0)
+    batch = {"ids": jnp.asarray(rng.integers(1, 256, (8, 64)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(1, 256, (8, 64)),
+                                   jnp.int32),
+             "mask": jnp.ones((8, 64), bool)}
+    params = b.init_all_params(seed=0)
+    tp, fp = b.split(params)
+    opt = jax.jit(functools.partial(init_opt_state,
+                                    sys=b.run.system))(tp)
+    step = b.make_train_step()
+    tp, opt, m = step(tp, fp, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    # the frozen arm really carries no optimizer state
+    assert len(opt["m"]) == len(b.train_idx)
+
+
+# ---------------------------------------------------------------------------
+# Serve-side adapter hot-swap over the cached trunk
+# ---------------------------------------------------------------------------
+
+def test_serve_adapter_hot_swap(mesh3):
+    from jax.sharding import NamedSharding
+    from repro.core.engine.serve import swap_adapters
+    b = peft_bundle(mesh3, cell=DEC_CELL)
+    params = b.init_all_params(seed=0)
+
+    def adapter_set(seed):
+        rng_ = np.random.default_rng(seed)
+        out = []
+        for i in b.train_idx:
+            d, ref = b.def_leaves[i], params[i]
+            # nonzero lora_b too, so the adapters actually shape logits
+            v = jnp.asarray(rng_.normal(0, 0.05, d.shape), ref.dtype)
+            out.append(jax.device_put(
+                v, NamedSharding(b.mesh, b.leaf_specs[i])))
+        return out
+
+    v1, v2 = adapter_set(1), adapter_set(2)
+    dec = b.make_decode_step()
+    tok = jnp.ones((DEC_CELL.global_batch, 1), jnp.int32)
+
+    def logits_with(adapters):
+        p = swap_adapters(b, params, adapters)
+        # the cached trunk is untouched: same buffers, no re-gather
+        for i in b.frozen_idx:
+            assert p[i] is params[i]
+        state = b.init_state(DEC_CELL)
+        out, _ = dec(p, tok, state)
+        return np.asarray(out)
+
+    l1, l2, l1_again = (logits_with(v1), logits_with(v2),
+                        logits_with(v1))
+    assert np.isfinite(l1).all() and np.isfinite(l2).all()
+    # different adapters -> different logits (the swap is live)
+    assert not np.array_equal(l1, l2)
+    # swapping back is exact: serving state fully determined by
+    # (cached trunk, adapter set)
+    np.testing.assert_array_equal(l1, l1_again)
+    with pytest.raises(ValueError, match="hot-swap"):
+        swap_adapters(b, params, v1[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Static enforcement: residency is the only classification surface
+# ---------------------------------------------------------------------------
+
+def test_no_consumer_reads_frozen_or_placement_directly():
+    """Outside core/strategy.py + core/residency.py, no module under
+    src/repro reads ``.frozen`` or ``.placement`` as an attribute --
+    the residency object is the one classification surface. (ast-based:
+    comments/strings don't count, keyword writes like
+    ``replace(d, frozen=True)`` don't count.)"""
+    src = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    allowed = {src / "core" / "strategy.py", src / "core" / "residency.py"}
+    offenders = []
+    for path in sorted(src.rglob("*.py")):
+        if path in allowed:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in ("frozen", "placement")):
+                offenders.append(f"{path.relative_to(src)}:{node.lineno}")
+    assert not offenders, offenders
